@@ -1,0 +1,10 @@
+"""Shared benchmark helpers: CSV emission in the required format."""
+from __future__ import annotations
+
+import sys
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """Required format: name,us_per_call,derived"""
+    print(f"{name},{us_per_call:.2f},{derived}")
+    sys.stdout.flush()

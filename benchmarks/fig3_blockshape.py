@@ -1,0 +1,71 @@
+"""Fig 3 — registers-per-load-instruction (LD1D/LD2D/LD4D) => rows-per-block.
+
+Host analogue: the reduction walks the buffer in blocks of R rows per step; R
+is the LD1/2/4 'registers per instruction' analogue.  The Pallas membench
+kernel sweeps the same knob as a real BlockSpec (core/autotune.py); here the
+host table is *measured* and the Pallas path is verified numerically.
+"""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import buffers, timing
+
+
+@partial(jax.jit, static_argnames=("rows", "passes"))
+def blocked_sum(x, rows: int, passes: int):
+    n_blocks = x.shape[0] // rows
+
+    def body(_, carry):
+        x, acc = carry
+
+        def inner(i, a):
+            blk = jax.lax.dynamic_slice_in_dim(x, i * rows, rows, axis=0)
+            return a + jnp.sum(blk, dtype=jnp.float32)
+
+        s = jax.lax.fori_loop(0, n_blocks, inner, jnp.float32(0))
+        eps = (s * 1e-30).astype(x.dtype).reshape(())
+        return (x.at[0, 0].add(eps), acc + s)
+
+    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    return acc
+
+
+def main(quick: bool = False):
+    nbytes = 4 * 2**20 if quick else 16 * 2**20
+    x = buffers.working_set(nbytes)
+    real = x.size * x.dtype.itemsize
+    passes = max(1, int((5e7 if quick else 2e8) / real))
+    reps = 5 if quick else 10
+    rows_list = (8, 16, 32, 128) if quick else (8, 16, 32, 64, 128, 256, 512)
+    best = (None, 0.0)
+    for rows in rows_list:
+        if x.shape[0] % rows:
+            continue
+        t = timing.time_fn(lambda: blocked_sum(x, rows, passes), reps=reps,
+                           warmup=2, bytes_per_call=float(real * passes))
+        emit(f"fig3/rows{rows}/{real}B", t.mean_s * 1e6, f"{t.gbps:.2f}GB/s")
+        if t.gbps > best[1]:
+            best = (rows, t.gbps)
+    print(f"# best block rows on this host: {best[0]} ({best[1]:.1f} GB/s)")
+
+    # Pallas path: numerics check via interpret mode (structure, not time)
+    from repro.kernels.membench import ops as mb_ops
+    from repro.kernels.membench.ref import reference
+    xs = buffers.working_set(64 * 2**10)
+    for rows in (8, 32, 128):
+        out = float(mb_ops.make_kernel("load_sum", block_rows=rows)(xs))
+        ref = float(reference("load_sum", xs))
+        assert abs(out - ref) < 1e-2, (rows, out, ref)
+    print("# pallas block-shape kernels verified vs oracle (interpret mode)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,55 @@
+"""Fig 4 — multi-device scaling + STREAM-triad comparison.
+
+MUST run as its own process: forces 8 host devices before jax init.  On TPU
+hardware the same code produces the real per-chip HBM scaling curve (the
+paper's CMG saturation study); on host the 8 'devices' share one socket so the
+curve saturating early IS the expected result (shared-bandwidth NUMA analogue).
+"""
+import os
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import argparse           # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+
+from benchmarks.common import emit                       # noqa: E402
+from repro.core import buffers, timing                   # noqa: E402
+from repro.core.scaling import scaling_curve             # noqa: E402
+
+
+@partial(jax.jit, static_argnames=("passes",))
+def stream_triad(a, b, c, passes: int):
+    def body(_, carry):
+        a, acc = carry
+        a = b + 1.5 * c + a * 1e-30          # triad with self-dependence
+        return (a, acc + a[0, 0].astype(jnp.float32))
+    a, acc = jax.lax.fori_loop(0, passes, body, (a, jnp.float32(0)))
+    return acc
+
+
+def main(quick: bool = False):
+    per_dev = 2 * 2**20 if quick else 16 * 2**20
+    pts = scaling_curve(per_dev, device_counts=[1, 2, 4, 8],
+                        passes=4, reps=4 if quick else 8)
+    for p in pts:
+        emit(f"fig4/devices{p.devices}", p.mean_s * 1e6,
+             f"{p.gbps:.2f}GB/s;speedup={p.speedup:.2f}x")
+
+    # STREAM triad reference (the paper compares against STREAM on A64FX)
+    x = buffers.working_set(per_dev)
+    b, c = x, x * 0.5
+    a = jnp.zeros_like(x)
+    passes = max(1, int(5e7 / (x.size * 4)))
+    t = timing.time_fn(lambda: stream_triad(a, b, c, passes), reps=4,
+                       warmup=2, bytes_per_call=float(3 * x.size * 4 * passes))
+    emit("fig4/stream_triad_1dev", t.mean_s * 1e6, f"{t.gbps:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(**vars(ap.parse_args()))

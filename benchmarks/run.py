@@ -1,0 +1,77 @@
+"""Benchmark runner — one entry per paper table/figure.
+
+``python -m benchmarks.run``         quick pass of every benchmark
+``python -m benchmarks.run --full``  full sweep (slower)
+
+Output: ``name,us_per_call,derived`` CSV lines (+ analysis tables).
+fig4 and the collective bench run in subprocesses (they force multi-device
+jax before init); everything else runs in-process.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _subproc(mod: str, quick: bool):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = f"{ROOT}/src:{ROOT}"
+    cmd = [sys.executable, "-m", mod] + (["--quick"] if quick else [])
+    r = subprocess.run(cmd, env=env, cwd=ROOT, text=True, capture_output=True,
+                       timeout=3600)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stdout.write(f"# {mod} FAILED\n{r.stderr[-2000:]}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,fig3,fig4,table1,collectives,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("# Arm-membench (TPU port) benchmark suite")
+    print("# name,us_per_call,derived")
+
+    if want("fig2"):
+        print("\n## fig2/5/6: hierarchy sweep x instruction mix (host measured)")
+        from benchmarks import fig2_hierarchy
+        fig2_hierarchy.main(quick=quick)
+    if want("fig1"):
+        print("\n## fig1: addressing-mode / stream-count overhead")
+        from benchmarks import fig1_addressing
+        fig1_addressing.main(quick=quick)
+    if want("fig3"):
+        print("\n## fig3: block-shape (registers-per-load) sweep")
+        from benchmarks import fig3_blockshape
+        fig3_blockshape.main(quick=quick)
+    if want("fig4"):
+        print("\n## fig4: device scaling + STREAM triad (8-device subprocess)")
+        _subproc("benchmarks.fig4_scaling", quick)
+    if want("collectives"):
+        print("\n## collectives: ICI-analogue link throughput (subprocess)")
+        _subproc("benchmarks.collective_bench_main", quick)
+    if want("table1"):
+        print("\n## table1: machine models (documented vs measured)")
+        from benchmarks import table1_machine
+        table1_machine.main(quick=quick)
+    if want("roofline"):
+        print("\n## roofline: 40-cell dry-run table (reads artifacts/dryrun)")
+        from benchmarks import roofline_table
+        roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Standalone Arm-membench-style machine characterization (the paper's CLI).
+
+Runs the hierarchy sweep under multiple instruction mixes, attributes per-level
+bandwidths, reports mix penalties + the measured ridge point, probes per-device
+variance (straggler check), and saves a MachineModel JSON the framework's
+autotuner and roofline analyzer consume.
+
+    PYTHONPATH=src python examples/characterize_machine.py [--full]
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.core import analysis, sweep
+from repro.core.buffers import sizes_logspace
+from repro.core.machine_model import detect_host
+from repro.ft.stragglers import probe_devices
+
+
+def main(full: bool = False):
+    host = detect_host()
+    print(f"host: {host.name}")
+    for lvl in host.levels:
+        sz = f"{lvl.size_bytes}B" if lvl.size_bytes else "-"
+        print(f"  {lvl.name}: {sz}")
+
+    sizes = (sizes_logspace(16 * 2**10, 256 * 2**20, per_decade=6) if full
+             else [32 * 2**10, 256 * 2**10, 2 * 2**20, 16 * 2**20, 64 * 2**20])
+    mixes = (["load_sum", "copy", "fma_1", "fma_2", "fma_8", "fma_32", "fma_64"]
+             if full else ["load_sum", "copy", "fma_8", "fma_32"])
+    print(f"\nsweeping {len(sizes)} sizes x {len(mixes)} mixes ...")
+    res = sweep.run_sweep(sizes=sizes, mix_names=mixes,
+                          reps=10 if full else 5,
+                          target_bytes=2e8 if full else 5e7)
+    model = analysis.build_machine_model(res, host)
+
+    print("\n== per-level bandwidth x instruction mix ==")
+    print(analysis.format_table(model.level_bw, model.mix_penalty))
+    if model.ridge_flops_per_byte:
+        print(f"\nmeasured ridge point: {model.ridge_flops_per_byte:.1f} flop/B")
+    print("\n== per-device probe (straggler check) ==")
+    for p in probe_devices(nbytes=1 * 2**20, passes=2, reps=3):
+        flag = "  <-- STRAGGLER" if p.is_straggler else ""
+        print(f"  {p.device}: {p.gbps:.2f} GB/s (z={p.z_score:+.2f}){flag}")
+
+    out = Path("artifacts")
+    out.mkdir(exist_ok=True)
+    model.to_json(out / "machine_model_host.json")
+    res.to_json(out / "characterize_sweep.json")
+    print(f"\nsaved: {out}/machine_model_host.json")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,25 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    from repro.launch import serve
+    sys.argv = ["serve", "--arch", args.arch, "--reduced",
+                "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
+                "--gen", str(args.gen)]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

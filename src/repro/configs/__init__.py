@@ -1,0 +1,18 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_arch,
+    list_archs,
+    param_count,
+    reduced,
+    register,
+)
+
+__all__ = [
+    "SHAPES", "ArchConfig", "MLAConfig", "MoEConfig", "ShapeConfig", "SSMConfig",
+    "get_arch", "list_archs", "param_count", "reduced", "register",
+]

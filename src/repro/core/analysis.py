@@ -1,0 +1,103 @@
+"""Sweep analysis — the reasoning in the paper's §6, automated.
+
+* level attribution: mean throughput inside each hierarchy level's working-set
+  band (paper: 'cumulative mean over one hundred repetitions' per level)
+* mix penalty: throughput of each mix relative to the best at that level — the
+  FADD-vs-LOAD-vs-NOP gap that exposes front-end/issue bottlenecks (§6.1-6.3)
+* knee/ridge detection: the smallest fma depth k where throughput drops below
+  90% of the pure-load mix — the measured ridge point of the machine
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.machine_model import HardwareSpec, MachineModel
+from repro.core.sweep import SweepResult
+
+
+def level_band(level_size: int | None, prev_size: int) -> tuple[float, float]:
+    """Working-set band that cleanly sits inside one level: (2x previous level,
+    0.5x this level); DRAM band is (2x last cache, inf)."""
+    lo = 2.0 * prev_size
+    hi = 0.5 * level_size if level_size else float("inf")
+    return lo, hi
+
+
+def attribute_levels(res: SweepResult, hw: HardwareSpec) -> dict:
+    """level -> {mix: mean GB/s within the level's band}."""
+    out: dict[str, dict] = {}
+    prev = 4 * 2**10 // 2
+    for lvl in hw.levels:
+        lo, hi = level_band(lvl.size_bytes, prev)
+        mixes = {}
+        for mix in {p.mix for p in res.points}:
+            pts = [p.gbps for p in res.by_mix(mix) if lo <= p.nbytes <= hi]
+            if pts:
+                mixes[mix] = float(np.mean(pts))
+        if mixes:
+            out[lvl.name] = mixes
+        if lvl.size_bytes:
+            prev = lvl.size_bytes
+    return out
+
+
+def mix_penalties(level_bw: dict) -> dict:
+    """Per level: each mix's throughput relative to the best mix — the paper's
+    instruction-mix gap (e.g. A64FX L1d: FADD 69% vs LOAD 99%)."""
+    out = {}
+    for lvl, mixes in level_bw.items():
+        best = max(mixes.values())
+        out[lvl] = {m: v / best for m, v in mixes.items()}
+    return out
+
+
+def ridge_depth(res: SweepResult, band: tuple[float, float],
+                threshold: float = 0.9) -> int | None:
+    """Smallest fma-chain depth whose throughput < threshold x load_sum —
+    the measured compute/bandwidth crossover inside the given size band."""
+    lo, hi = band
+
+    def mean_bw(mix):
+        pts = [p.gbps for p in res.by_mix(mix) if lo <= p.nbytes <= hi]
+        return float(np.mean(pts)) if pts else None
+
+    base = mean_bw("load_sum")
+    if not base:
+        return None
+    depths = sorted(int(p.mix.split("_")[1]) for p in res.points
+                    if p.mix.startswith("fma_"))
+    for k in depths:
+        bw = mean_bw(f"fma_{k}")
+        if bw is not None and bw < threshold * base:
+            return k
+    return None
+
+
+def build_machine_model(res: SweepResult, hw: HardwareSpec) -> MachineModel:
+    level_bw = attribute_levels(res, hw)
+    pen = mix_penalties(level_bw)
+    # ridge measured in the innermost level band (cache-resident)
+    first = hw.levels[0]
+    band = level_band(first.size_bytes, 2 * 2**10)
+    k = ridge_depth(res, band)
+    ridge = None
+    if k is not None:
+        # flops/byte at the crossover: 2k flops per loaded element
+        itemsize = 4 if res.meta.get("dtype", "float32") == "float32" else 2
+        ridge = 2.0 * k / itemsize
+    return MachineModel(
+        hardware={"name": hw.name,
+                  "levels": [(l.name, l.size_bytes, l.read_bw) for l in hw.levels]},
+        level_bw=level_bw,
+        ridge_flops_per_byte=ridge,
+        mix_penalty=pen)
+
+
+def format_table(level_bw: dict, pen: dict) -> str:
+    lines = [f"{'level':8s} {'mix':10s} {'GB/s':>10s} {'rel':>6s}"]
+    for lvl, mixes in level_bw.items():
+        for m, v in sorted(mixes.items()):
+            lines.append(f"{lvl:8s} {m:10s} {v:10.2f} {pen[lvl][m]:6.2f}")
+    return "\n".join(lines)

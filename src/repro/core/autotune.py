@@ -1,0 +1,63 @@
+"""Block-shape autotuner — the paper's LD1D/LD2D/LD4D study (C4) put to work.
+
+Figure 3 shows A64FX peaks at exactly two registers per load instruction; the
+TPU analogue is rows-per-DMA (Pallas block shape).  This module sweeps block
+shapes with the membench kernel family and returns the best shape for a given
+working-set size — the framework's model kernels consult it instead of
+hard-coding tiles.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.core import buffers, timing
+
+
+# candidate block shapes: (sublane-multiple rows, 128 lanes) — v5e native tile
+# is (8, 128) for f32; LD1/2/4 analogue = 8/16/32/... rows per block.
+CANDIDATE_ROWS = (8, 16, 32, 64, 128, 256, 512)
+
+
+@dataclass
+class TuneResult:
+    nbytes: int
+    dtype: str
+    mix: str
+    best_rows: int
+    table: dict  # rows -> GB/s
+
+
+def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
+                       reps: int = 8, interpret: bool = True) -> TuneResult:
+    """Run the *Pallas* membench kernel across block shapes.
+
+    interpret=True on CPU (kernel-body semantics validated); on real TPU pass
+    interpret=False for wall-clock-meaningful numbers.
+    """
+    from repro.kernels.membench import ops as mb_ops
+    table = {}
+    x = buffers.working_set(nbytes, dtype=dtype)
+    rows_total = x.shape[0]
+    for rows in CANDIDATE_ROWS:
+        if rows > rows_total:
+            continue
+        fn = mb_ops.make_kernel(mix=mix, block_rows=rows, interpret=interpret)
+        t = timing.time_fn(fn, x, reps=reps, warmup=1,
+                           bytes_per_call=float(x.size * x.dtype.itemsize))
+        table[rows] = t.gbps
+    best = max(table, key=table.get)
+    return TuneResult(nbytes=nbytes, dtype=str(jnp.dtype(dtype)), mix=mix,
+                      best_rows=best, table=table)
+
+
+def choose_block_rows(nbytes: int, cache_path: str | Path | None = None,
+                      default: int = 128) -> int:
+    """Consult a cached tune result; fall back to the v5e-sensible default."""
+    if cache_path and Path(cache_path).exists():
+        d = json.loads(Path(cache_path).read_text())
+        return int(d.get("best_rows", default))
+    return default

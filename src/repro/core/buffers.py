@@ -1,0 +1,57 @@
+"""Benchmark buffer initialization — the paper's denormal-avoiding discipline.
+
+x86-membench initializes buffers with a cycle of a user-defined number, its
+reciprocal, and the additive inverses of both: (v, 1/v, -v, -1/v).  This
+guarantees no denormals (which stall FP pipelines) while keeping non-trivial
+data (data values influence power draw and, under power caps, throughput —
+paper §2/§3.2).  Kept verbatim here, property-tested in tests/test_core.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+DEFAULT_VALUE = 1.234567
+
+
+def init_pattern(n: int, value: float = DEFAULT_VALUE, dtype=jnp.float32):
+    """(v, 1/v, -v, -1/v) cycled to length n."""
+    if value == 0 or not np.isfinite(value):
+        raise ValueError("init value must be finite and nonzero")
+    cycle = np.array([value, 1.0 / value, -value, -1.0 / value], dtype=np.float64)
+    buf = np.tile(cycle, n // 4 + 1)[:n]
+    arr = jnp.asarray(buf, dtype=dtype)
+    return arr
+
+
+def working_set(nbytes: int, dtype=jnp.float32, value: float = DEFAULT_VALUE,
+                lanes: int = 128):
+    """A 2D (rows, lanes) buffer of ~nbytes — 2D so Pallas BlockSpecs tile it
+    natively ((8,128)-aligned, the v5e register tile)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    rows = max(8, int(round(nbytes / (lanes * itemsize) / 8)) * 8)
+    n = rows * lanes
+    if jnp.issubdtype(dtype, jnp.integer):
+        cycle = np.array([1, 7, -1, -7], dtype=np.int64)
+        buf = np.tile(cycle, n // 4 + 1)[:n].astype(np.dtype(dtype.name
+                                                             if hasattr(dtype, "name")
+                                                             else dtype))
+        return jnp.asarray(buf).reshape(rows, lanes)
+    return init_pattern(n, value, dtype).reshape(rows, lanes)
+
+
+def has_denormals(arr) -> bool:
+    a = np.asarray(arr, dtype=np.float64)
+    finfo = np.finfo(np.asarray(arr).dtype) if np.asarray(arr).dtype.kind == "f" \
+        else None
+    if finfo is None:
+        return False
+    nz = a[a != 0.0]
+    return bool(np.any(np.abs(nz) < finfo.tiny))
+
+
+def sizes_logspace(lo: int, hi: int, per_decade: int = 8) -> list[int]:
+    """Log-spaced working-set sizes (bytes), 8-row aligned by working_set()."""
+    n = max(2, int(np.ceil((np.log10(hi) - np.log10(lo)) * per_decade)))
+    out = np.unique(np.geomspace(lo, hi, n).astype(np.int64))
+    return [int(x) for x in out]

@@ -1,0 +1,96 @@
+"""Collective / interconnect throughput — C6's remote-access study, mesh-native.
+
+The paper measures NUMA-remote access and multi-core scaling; the TPU analogue
+is per-link ICI throughput under each collective pattern.  Runs on any mesh
+(host CPU devices for harness validation; real ICI on hardware).  Reports
+algorithm bandwidth *and* ring-model link bandwidth so results compare directly
+against the documented ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import buffers, timing
+
+
+@dataclass
+class CollectiveResult:
+    op: str
+    axis: str
+    group_size: int
+    nbytes: int
+    mean_s: float
+    std_s: float
+    algo_gbps: float       # payload bytes / time
+    link_gbps: float       # ring-model per-link wire bandwidth
+
+
+def _ring_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return {"all_reduce": 2 * (n - 1) / n,
+            "all_gather": (n - 1) / n,
+            "reduce_scatter": (n - 1) / n,
+            "all_to_all": (n - 1) / n,
+            "ppermute": 1.0}[op]
+
+
+def bench_collective(mesh, axis: str, op: str, nbytes: int,
+                     reps: int = 10, dtype=jnp.float32) -> CollectiveResult:
+    n = mesh.shape[axis]
+    elems = max(128, nbytes // jnp.dtype(dtype).itemsize)
+    elems = (elems // (128 * n)) * 128 * n or 128 * n
+    x = buffers.init_pattern(elems, dtype=dtype).reshape(n, -1)
+
+    if op == "all_reduce":
+        body = lambda v: jax.lax.psum(v, axis)
+        in_spec, out_spec = P(axis), P(axis)
+    elif op == "all_gather":
+        body = lambda v: jax.lax.all_gather(v, axis, tiled=True)
+        in_spec, out_spec = P(axis), P()
+    elif op == "reduce_scatter":
+        # replicated input (n, m); each device ends with its (n/size, m) slice
+        body = lambda v: jax.lax.psum_scatter(v, axis, tiled=True)
+        in_spec, out_spec = P(), P(axis)
+    elif op == "all_to_all":
+        def body(v):  # local (1, m) -> (n, m/n) lanes -> a2a -> back to (1, m)
+            w = jax.lax.all_to_all(v.reshape(n, -1), axis, 0, 0, tiled=False)
+            return w.reshape(v.shape)
+        in_spec, out_spec = P(axis), P(axis)
+    elif op == "ppermute":
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        body = lambda v: jax.lax.ppermute(v, axis, perm)
+        in_spec, out_spec = P(axis), P(axis)
+    else:
+        raise KeyError(op)
+
+    def fn(x):
+        out = jax.shard_map(body, mesh=mesh, in_specs=in_spec,
+                            out_specs=out_spec, check_vma=False)(x)
+        return jax.tree.leaves(out)[0]
+
+    fjit = jax.jit(fn)
+    payload = x.size * x.dtype.itemsize // n      # per-device payload
+    t = timing.time_fn(fjit, x, reps=reps, warmup=2, bytes_per_call=payload)
+    link = payload * _ring_factor(op, n) / t.mean_s / 1e9
+    return CollectiveResult(op=op, axis=axis, group_size=n,
+                            nbytes=payload, mean_s=t.mean_s, std_s=t.std_s,
+                            algo_gbps=payload / t.mean_s / 1e9, link_gbps=link)
+
+
+def bench_all(mesh, nbytes: int = 4 * 2**20, ops=None, reps: int = 10):
+    ops = ops or ["all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+                  "ppermute"]
+    out = []
+    for axis in mesh.axis_names:
+        if mesh.shape[axis] < 2:
+            continue
+        for op in ops:
+            out.append(bench_collective(mesh, axis, op, nbytes, reps=reps))
+    return out

@@ -1,0 +1,135 @@
+"""The instruction-mix ladder — C2 of the paper, TPU-native.
+
+Arm-membench measures the same data stream under LOAD-only / LOAD+FADD /
+LOAD+NOP mixes; the throughput *gap* between mixes attributes the bottleneck
+(load/store units vs front end).  The TPU port sweeps *work per loaded byte*:
+
+    mix            ops/element   Armv8 analogue
+    ``load_sum``   1 add         the FADD accumulation loop (loads feeding FADDs)
+    ``copy``       1 store       STREAM-copy (write path exercised)
+    ``fma_k``      2k flops      FADD loop with k-deep dependent FMA chain —
+                                 the NOP-substitution ladder: as k→0 the kernel
+                                 degenerates to pure loads, as k grows the VPU
+                                 becomes the limiter; the knee is the measured
+                                 ridge point
+    ``mxu``        2*128 flops   one 128x128 matmul per tile (MXU saturation)
+
+Each kernel loops ``passes`` times over the buffer inside one compiled call
+(the paper's measurement loop).  A one-element self-dependent perturbation
+defeats XLA's while-loop invariant code motion — without it the compiler hoists
+the whole body out of the loop and measures nothing (the rdtsc-serialization
+problem in compiler form).
+
+These jnp kernels are the *oracles*; kernels/membench holds the Pallas TPU
+embodiment with explicit BlockSpec tiling (including a true ``load_only``,
+which XLA-level code cannot express without the load being dead-code).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Mix:
+    name: str
+    flops_per_elem: float     # arithmetic per element per pass
+    reads_per_elem: float = 1.0
+    writes_per_elem: float = 0.0
+
+
+def mixes(fma_depths=(1, 2, 4, 8, 16, 32, 64)) -> dict[str, Mix]:
+    out = {
+        "load_sum": Mix("load_sum", 1.0),
+        "copy": Mix("copy", 0.0, reads_per_elem=1.0, writes_per_elem=1.0),
+        "mxu": Mix("mxu", 2.0 * 128.0),
+    }
+    for k in fma_depths:
+        out[f"fma_{k}"] = Mix(f"fma_{k}", 2.0 * k)
+    return out
+
+
+def bytes_per_pass(mix: Mix, nbytes: int) -> float:
+    return (mix.reads_per_elem + mix.writes_per_elem) * nbytes
+
+
+def flops_per_pass(mix: Mix, n_elems: int) -> float:
+    return mix.flops_per_elem * n_elems
+
+
+# ---------------------------------------------------------------------------
+# XLA kernels (host-measurable oracles)
+# ---------------------------------------------------------------------------
+
+def _perturb(x, acc):
+    """One-element self-dependent write: defeats loop-invariant hoisting."""
+    eps = (acc * 1e-30).astype(x.dtype).reshape(())
+    return x.at[(0,) * x.ndim].add(eps)
+
+
+@partial(jax.jit, static_argnames=("passes",))
+def k_load_sum(x, passes: int):
+    def body(_, carry):
+        x, acc = carry
+        acc = acc + jnp.sum(x, dtype=jnp.float32)
+        return (_perturb(x, acc), acc)
+    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("passes",))
+def k_copy(x, passes: int):
+    def body(i, carry):
+        x, y, acc = carry
+        scale = (1.0 + acc * 0e0).astype(x.dtype)   # forces y to depend on acc
+        y = x * scale
+        acc = acc + y.reshape(-1)[0].astype(jnp.float32)
+        return (x, y, acc)
+    x0 = x
+    y0 = jnp.zeros_like(x)
+    _, y, acc = jax.lax.fori_loop(0, passes, body, (x0, y0, jnp.float32(0)))
+    return acc + y.reshape(-1)[-1].astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("passes", "depth"))
+def k_fma(x, passes: int, depth: int):
+    def body(_, carry):
+        x, acc = carry
+        v = x.astype(jnp.float32)
+        a = jnp.float32(1.0000001)
+        b = jnp.float32(1e-9)
+        for _ in range(depth):          # dependent FMA chain per element
+            v = v * a + b
+        acc = acc + jnp.sum(v)
+        return (_perturb(x, acc), acc)
+    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("passes",))
+def k_mxu(x, w, passes: int):
+    """x: (rows, 128); w: (128, 128) — one matmul per pass (MXU analogue)."""
+    def body(_, carry):
+        x, acc = carry
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        acc = acc + jnp.sum(y[:1, :1])
+        return (_perturb(x, acc), acc)
+    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    return acc
+
+
+def run_mix(mix_name: str, x, passes: int, w=None):
+    if mix_name == "load_sum":
+        return k_load_sum(x, passes)
+    if mix_name == "copy":
+        return k_copy(x, passes)
+    if mix_name == "mxu":
+        if w is None:
+            w = jnp.eye(x.shape[-1], dtype=x.dtype)
+        return k_mxu(x, w, passes)
+    if mix_name.startswith("fma_"):
+        return k_fma(x, passes, int(mix_name.split("_")[1]))
+    raise KeyError(mix_name)

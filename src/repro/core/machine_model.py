@@ -1,0 +1,104 @@
+"""MachineModel — the paper's Table 1, as a data structure the framework uses.
+
+Holds documented peaks (the paper compares measured vs documented throughout)
+and measured sweep results; feeds the roofline analyzer and the kernel
+autotuner.  TPU v5e constants come from the assignment; the host entry is
+whatever this container measures (the benchmark proves itself on the machine it
+runs on, exactly like the paper's three Arm systems).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MemLevel:
+    name: str
+    size_bytes: Optional[int]      # None = unbounded (DRAM/HBM)
+    read_bw: Optional[float]       # documented B/s (None if undocumented)
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float              # documented peak FLOP/s (per chip / core set)
+    levels: tuple[MemLevel, ...]
+    link_bw: Optional[float] = None  # interconnect B/s per link
+    frequency_hz: Optional[float] = None
+    notes: str = ""
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    levels=(
+        MemLevel("vmem", 128 * 2**20, None),   # ~128 MiB software-managed
+        MemLevel("hbm", 16 * 2**30, 819e9),
+    ),
+    link_bw=50e9,
+    notes="assignment constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI",
+)
+
+# The three paper systems, for the Table-1 comparison benchmark.
+A64FX = HardwareSpec(
+    name="fujitsu-a64fx", peak_flops=3.072e12,
+    levels=(MemLevel("L1d", 64 * 2**10, 230.4e9),
+            MemLevel("L2", 8 * 2**20, 115.2e9),
+            MemLevel("HBM2", 32 * 2**30, 921.6e9 / 48)),
+    frequency_hz=1.8e9, notes="paper Table 1 (per-core cache BW, per-socket DRAM)")
+ALTRA = HardwareSpec(
+    name="ampere-altra-q80-30", peak_flops=None or 0.0,
+    levels=(MemLevel("L1d", 64 * 2**10, 96e9),
+            MemLevel("L2", 1 * 2**20, None),
+            MemLevel("L3", 32 * 2**20, None),
+            MemLevel("DRAM", 512 * 2**30, 204.8e9 / 80)),
+    frequency_hz=3e9, notes="paper Table 1")
+THUNDERX2 = HardwareSpec(
+    name="marvell-thunderx2", peak_flops=0.0,
+    levels=(MemLevel("L1d", 32 * 2**10, 64e9),
+            MemLevel("L2", 256 * 2**10, None),
+            MemLevel("L3", 28 * 2**20, None),
+            MemLevel("DRAM", 128 * 2**30, 170.5e9 / 28)),
+    frequency_hz=2e9, notes="paper Table 1")
+
+
+def detect_host() -> HardwareSpec:
+    """Best-effort host cache topology from sysfs (sizes only; BW unmeasured
+    until the sweep runs — the paper's 'documentation unavailable' case)."""
+    levels = []
+    base = Path("/sys/devices/system/cpu/cpu0/cache")
+    if base.exists():
+        for idx in sorted(base.glob("index*")):
+            try:
+                lvl = (idx / "level").read_text().strip()
+                typ = (idx / "type").read_text().strip()
+                size = (idx / "size").read_text().strip()
+                if typ == "Instruction":
+                    continue
+                mult = {"K": 2**10, "M": 2**20}.get(size[-1], 1)
+                nb = int(size[:-1]) * mult if size[-1] in "KM" else int(size)
+                levels.append(MemLevel(f"L{lvl}", nb, None))
+            except (OSError, ValueError):
+                continue
+    levels.append(MemLevel("DRAM", None, None))
+    return HardwareSpec(name="host-cpu", peak_flops=0.0, levels=tuple(levels),
+                        notes="sizes from sysfs; bandwidths measured by sweep")
+
+
+@dataclass
+class MachineModel:
+    """Measured model of one machine: per-level bandwidth per mix + ridge."""
+    hardware: dict
+    level_bw: dict = field(default_factory=dict)   # level -> {mix: GB/s}
+    ridge_flops_per_byte: Optional[float] = None
+    mix_penalty: dict = field(default_factory=dict)  # mix -> relative to best
+
+    def to_json(self, path):
+        Path(path).write_text(json.dumps(asdict(self), indent=2, default=str))
+
+    @staticmethod
+    def from_json(path) -> "MachineModel":
+        return MachineModel(**json.loads(Path(path).read_text()))

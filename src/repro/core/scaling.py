@@ -1,0 +1,59 @@
+"""Multi-device scaling curves — the paper's Figure 4 (HBM2 scaling vs cores).
+
+Shards a working set over the first k devices and measures aggregate load
+throughput; on hardware this reproduces the CMG-saturation study (6 cores
+saturate one HBM2 stack), here it validates the harness on host devices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import buffers, timing
+from repro.core.instruction_mix import run_mix
+
+
+@dataclass
+class ScalingPoint:
+    devices: int
+    mix: str
+    nbytes_total: int
+    mean_s: float
+    gbps: float
+    speedup: float = 1.0
+
+
+def scaling_curve(nbytes_per_device: int, mix: str = "load_sum",
+                  device_counts=None, passes: int = 8, reps: int = 8):
+    devs = jax.devices()
+    device_counts = device_counts or [d for d in (1, 2, 4, 8, 16, 32, 64)
+                                      if d <= len(devs)]
+    import numpy as np
+    points = []
+    base = None
+    for k in device_counts:
+        mesh = Mesh(np.array(devs[:k]).reshape(k), ("d",))
+        x = buffers.working_set(nbytes_per_device * k)
+        x = jax.device_put(x, NamedSharding(mesh, P("d", None)))
+
+        def fn(x):
+            def body(v):  # v: (1, rows_local, 128) per device
+                return run_mix(mix, v[0], passes).reshape(1)
+            return jax.shard_map(body, mesh=mesh, in_specs=P("d", None, None),
+                                 out_specs=P("d"), check_vma=False)(
+                x.reshape(k, -1, x.shape[-1])).sum()
+
+        t = timing.time_fn(jax.jit(fn), x, reps=reps, warmup=2,
+                           bytes_per_call=float(x.size * x.dtype.itemsize) * passes)
+        gbps = t.gbps
+        if base is None:
+            base = gbps
+        points.append(ScalingPoint(devices=k, mix=mix,
+                                   nbytes_total=x.size * x.dtype.itemsize,
+                                   mean_s=t.mean_s, gbps=gbps,
+                                   speedup=gbps / base))
+    return points

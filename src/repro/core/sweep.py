@@ -1,0 +1,81 @@
+"""Hierarchy throughput sweep — C1 of the paper.
+
+One run walks working-set sizes across every level of the memory hierarchy
+(host: L1d -> L2 -> L3 -> DRAM; TPU target: VMEM -> HBM), measuring each
+instruction mix at each size.  This *is* the paper's Figure 2/5/6 engine.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from repro.core import buffers, instruction_mix, timing
+
+
+@dataclass
+class SweepPoint:
+    nbytes: int
+    mix: str
+    dtype: str
+    passes: int
+    mean_s: float
+    std_s: float
+    gbps: float
+    gflops: float
+
+
+@dataclass
+class SweepResult:
+    points: list[SweepPoint] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+
+    def by_mix(self, mix: str) -> list[SweepPoint]:
+        return [p for p in self.points if p.mix == mix]
+
+    def to_json(self, path: str | Path):
+        Path(path).write_text(json.dumps(
+            {"meta": self.meta, "points": [asdict(p) for p in self.points]},
+            indent=2))
+
+    @staticmethod
+    def from_json(path: str | Path) -> "SweepResult":
+        d = json.loads(Path(path).read_text())
+        return SweepResult([SweepPoint(**p) for p in d["points"]], d["meta"])
+
+
+def pick_passes(nbytes: int, target_bytes: float = 2e8) -> int:
+    """Enough passes that one timed call moves ~target_bytes (>= ms-scale)."""
+    return max(1, int(target_bytes / max(nbytes, 1)))
+
+
+def run_sweep(sizes: list[int] | None = None,
+              mix_names: list[str] | None = None,
+              dtype=jnp.float32,
+              reps: int = 10,
+              target_bytes: float = 2e8,
+              value: float = buffers.DEFAULT_VALUE) -> SweepResult:
+    sizes = sizes or buffers.sizes_logspace(16 * 2**10, 64 * 2**20, per_decade=6)
+    all_mixes = instruction_mix.mixes()
+    mix_names = mix_names or ["load_sum", "copy", "fma_8"]
+
+    res = SweepResult(meta={"dtype": str(jnp.dtype(dtype)), "reps": reps,
+                            "sizes": sizes, "mixes": mix_names})
+    for nbytes in sizes:
+        x = buffers.working_set(nbytes, dtype=dtype, value=value)
+        real_bytes = x.size * x.dtype.itemsize
+        passes = pick_passes(real_bytes, target_bytes)
+        for name in mix_names:
+            mix = all_mixes[name]
+            t = timing.time_fn(
+                lambda: instruction_mix.run_mix(name, x, passes),
+                reps=reps, warmup=2,
+                bytes_per_call=instruction_mix.bytes_per_pass(mix, real_bytes) * passes,
+                flops_per_call=instruction_mix.flops_per_pass(mix, x.size) * passes)
+            res.points.append(SweepPoint(
+                nbytes=real_bytes, mix=name, dtype=str(jnp.dtype(dtype)),
+                passes=passes, mean_s=t.mean_s, std_s=t.std_s,
+                gbps=t.gbps, gflops=t.gflops))
+    return res

@@ -1,0 +1,74 @@
+"""Serialized timing harness — the CNTVCT + DSB SY/ISB discipline, JAX-side.
+
+The paper reads the generic timer with data/instruction barriers and reports the
+cumulative mean over one hundred internal repetitions (§4/§5).  Here:
+serialization = ``block_until_ready`` on the kernel output (nothing retires
+until all device work is visible); repetition = ``reps`` timed calls after
+``warmup`` untimed ones; the report carries the running cumulative mean and the
+standard deviation (the paper reports σ for every plot).
+
+Dispatch overhead (~10 us) would swamp cache-resident workloads, so kernels
+take an *internal pass count*: they loop over the buffer inside one compiled
+call (see instruction_mix.py) exactly like membench's measurement loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class TimingResult:
+    times_s: list[float]
+    bytes_per_call: float = 0.0
+    flops_per_call: float = 0.0
+
+    @property
+    def mean_s(self) -> float:
+        return float(np.mean(self.times_s))
+
+    @property
+    def std_s(self) -> float:
+        return float(np.std(self.times_s))
+
+    @property
+    def min_s(self) -> float:
+        return float(np.min(self.times_s))
+
+    @property
+    def cumulative_mean_s(self) -> list[float]:
+        c = np.cumsum(self.times_s) / np.arange(1, len(self.times_s) + 1)
+        return [float(x) for x in c]
+
+    @property
+    def gbps(self) -> float:
+        return self.bytes_per_call / self.mean_s / 1e9 if self.mean_s else 0.0
+
+    @property
+    def gflops(self) -> float:
+        return self.flops_per_call / self.mean_s / 1e9 if self.mean_s else 0.0
+
+    def summary(self) -> dict:
+        return {"mean_s": self.mean_s, "std_s": self.std_s, "min_s": self.min_s,
+                "reps": len(self.times_s), "gbps": self.gbps,
+                "gflops": self.gflops,
+                "rel_std": self.std_s / self.mean_s if self.mean_s else 0.0}
+
+
+def time_fn(fn, *args, reps: int = 20, warmup: int = 3,
+            bytes_per_call: float = 0.0, flops_per_call: float = 0.0
+            ) -> TimingResult:
+    """Time ``fn(*args)``; fn must return a jax array (serialization point)."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        out = fn(*args)
+        jax.block_until_ready(out)        # the DSB SY / ISB analogue
+        times.append((time.perf_counter_ns() - t0) / 1e9)
+    return TimingResult(times, bytes_per_call, flops_per_call)

@@ -1,0 +1,75 @@
+"""Straggler detection — the paper's σ-reporting discipline, weaponized.
+
+Arm-membench reports the standard deviation of every measurement series; a slow
+HBM stack / downclocked chip shows up as a per-device throughput outlier long
+before it shows up as a failed step.  ``probe_devices`` runs the membench
+load_sum kernel *per device* and flags outliers; at scale the same probe runs
+per host in the launcher's preflight, and ``StepTimer`` watches live step times
+for drift (mid-run stragglers).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core import buffers
+from repro.core.instruction_mix import run_mix
+
+
+@dataclass
+class DeviceProbe:
+    device: str
+    gbps: float
+    z_score: float
+    is_straggler: bool
+
+
+def probe_devices(nbytes: int = 4 * 2**20, passes: int = 4, reps: int = 5,
+                  z_threshold: float = -3.0) -> list[DeviceProbe]:
+    """Per-device load throughput; z < -3 (slower than fleet) flags straggler."""
+    x_host = np.asarray(buffers.working_set(nbytes))
+    results = []
+    for dev in jax.devices():
+        x = jax.device_put(x_host, dev)
+        run_mix("load_sum", x, passes).block_until_ready()  # warm
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter_ns()
+            run_mix("load_sum", x, passes).block_until_ready()
+            times.append((time.perf_counter_ns() - t0) / 1e9)
+        gbps = nbytes * passes / np.mean(times) / 1e9
+        results.append([str(dev), gbps])
+    vals = np.array([r[1] for r in results])
+    mu, sd = vals.mean(), vals.std() + 1e-12
+    return [DeviceProbe(device=r[0], gbps=r[1], z_score=(r[1] - mu) / sd,
+                        is_straggler=(r[1] - mu) / sd < z_threshold)
+            for r in results]
+
+
+@dataclass
+class StepTimer:
+    """Online step-time monitor: EWMA + σ band; flags drift mid-run."""
+    alpha: float = 0.05
+    z_threshold: float = 4.0
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    slow_steps: list = field(default_factory=list)
+
+    def update(self, step: int, dt: float) -> bool:
+        if self.n < 5:  # burn-in
+            self.mean = (self.mean * self.n + dt) / (self.n + 1)
+            self.var = self.var * 0.5 + (dt - self.mean) ** 2 * 0.5
+            self.n += 1
+            return False
+        sd = max(self.var ** 0.5, 1e-9)
+        is_slow = (dt - self.mean) / sd > self.z_threshold
+        if is_slow:
+            self.slow_steps.append((step, dt))
+        self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
+        self.var = (1 - self.alpha) * self.var + self.alpha * (dt - self.mean) ** 2
+        self.n += 1
+        return is_slow

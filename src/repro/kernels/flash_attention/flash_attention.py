@@ -1,0 +1,109 @@
+"""Causal GQA flash attention — Pallas TPU kernel (forward).
+
+Grid (batch*kv_head, q_blocks, kv_blocks); the kv axis is innermost so the
+online-softmax state (m, l, acc) lives in VMEM scratch across kv steps.  Causal
+block skipping is structural: the kv loop is bounded per q block through
+``pl.when`` on fully-masked blocks (the blocks the XLA 'masked' path wastes
+FLOPs on — EXPERIMENTS.md §Perf quantifies that gap).
+
+Forward-only by design: training runs the XLA path (whose backward is the
+checkpointed flash scan); this kernel is the serving/prefill hot spot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(G: int, scale: float, causal: bool,
+                 q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    qb = q_ref.shape[2]      # q_ref: (1, G, qb, d)
+    kb = k_ref.shape[1]      # k_ref: (1, kb, d)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal skip: q block qi only attends kv blocks with start <= q end
+    run = (not causal) or (ki * kb <= qi * qb + qb - 1)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0].astype(jnp.float32)            # (G, qb, d)
+        k = k_ref[0].astype(jnp.float32)            # (kb, d)
+        v = v_ref[0].astype(jnp.float32)            # (kb, dv)
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (G, qb, kb), 1)
+            kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (G, qb, kb), 2)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        m_prev = m_scr[...]                          # (G, qb)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 256,
+                    kv_block: int = 256, interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D/Dv) -> (B, Sq, H, Dv).
+
+    GQA: H = G * KV; the grid batches over (B * KV), each step carrying the G
+    query heads of that kv head in one (G, qb, d) block.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV
+    scale = 1.0 / (D ** 0.5)
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0
+    nq, nk = Sq // q_block, Sk // kv_block
+
+    # layout: (B*KV, G, Sq, D) so a (G, qb, D) q block pairs with (kb, D) k block
+    qr = q.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * KV, G, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dv)
+
+    kern = functools.partial(_attn_kernel, G, scale, causal)
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        kern,
+        grid=(B * KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, q_block, D), lambda b, qi, ki: (b, 0, qi, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, Dv), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, q_block, Dv),
+                               lambda b, qi, ki: (b, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, q_block), jnp.float32),
+            pltpu.VMEM((G, q_block), jnp.float32),
+            pltpu.VMEM((G, q_block, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KV, G, Sq, Dv).transpose(0, 3, 1, 2, 4).reshape(
+        B, Sq, H, Dv)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash(q, k, v, causal: bool = True, q_block: int = 256,
+          kv_block: int = 256, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, q_block=q_block,
+                           kv_block=kv_block, interpret=interpret)
+
+
+def flops(q, k, causal: bool) -> float:
+    """Useful attention flops (2*S_q*S_k*D*H*B*2 matmuls, halved if causal)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    f = 4.0 * B * H * Sq * Sk * D
+    return f / 2 if causal else f

@@ -1,0 +1,21 @@
+"""Oracle for the flash-attention kernel: plain softmax attention in f32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference(q, k, v, *, causal: bool = True):
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qf, kf) / (D ** 0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqj,bjkd->bkgqd", w, vf)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, -1).astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU membench throughput kernels — the paper's measurement loop with
+explicit VMEM tiling.
+
+Knobs (mapping to the paper, DESIGN.md §2):
+  mix         load_only | load_sum | copy | fma_k | mxu     (C2: LOAD/FADD/NOP)
+  block_rows  rows per (block_rows, 128) VMEM tile           (C4: LD1D/LD2D/LD4D)
+  streams     1 = sequential block walk (post-increment analogue);
+              S > 1 = S interleaved streams via the index_map (the paper's
+              four offset address pointers breaking AGU dependencies)   (C3)
+
+``load_only`` is the mix XLA cannot express (a dead load is DCE'd): here the
+block is *loaded* into VMEM by the pipeline regardless, and only one lane ever
+feeds the accumulator, so the measured time is pure data movement + grid
+overhead — the LD1/LD2D-only loop of §4.
+
+The grid accumulates into a (1, 1) output revisited every step; TPU grids are
+sequential per core, so the accumulation is race-free (and the revisited block
+stays resident in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_body(mix: str, depth: int, blk, w=None):
+    """blk: (rows, 128) f32 tile already in VMEM.  Returns scalar contribution."""
+    if mix == "load_only":
+        # touch one lane only: the DMA moved the whole tile, the VPU does ~nothing
+        return blk[0, 0]
+    if mix == "load_sum":
+        return jnp.sum(blk)
+    if mix == "fma":
+        v = blk
+        a = jnp.float32(1.0000001)
+        b = jnp.float32(1e-9)
+        for _ in range(depth):
+            v = v * a + b
+        return jnp.sum(v)
+    if mix == "mxu":
+        y = jnp.dot(blk, w, preferred_element_type=jnp.float32)
+        return jnp.sum(y[:1, :1])
+    raise KeyError(mix)
+
+
+def _acc_kernel(mix: str, depth: int, *refs):
+    # refs order: (x_ref[, w_ref], o_ref)
+    x_ref, o_ref = refs[0], refs[-1]
+    w_ref = refs[1] if mix == "mxu" else None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[0, 0] = jnp.float32(0.0)
+
+    blk = x_ref[...].astype(jnp.float32)
+    wv = w_ref[...].astype(jnp.float32) if w_ref is not None else None
+    o_ref[0, 0] += _mix_body(mix, depth, blk, wv)
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _stream_index_map(streams: int, n_blocks: int):
+    """Block visit order: i -> interleaved across `streams` equal segments.
+    streams=1 is the sequential (single-pointer) walk."""
+    seg = n_blocks // streams
+
+    def index_map(i):
+        return (jax.lax.rem(i, streams) * seg + i // streams, 0)
+
+    return index_map
+
+
+def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
+                  block_rows: int = 128, streams: int = 1,
+                  interpret: bool = True):
+    """x: (rows, 128) f32/bf16; returns scalar (load-family) or copy output."""
+    rows, lanes = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    n_blocks = rows // block_rows
+    assert n_blocks % streams == 0, (n_blocks, streams)
+    imap = _stream_index_map(streams, n_blocks)
+
+    in_specs = [pl.BlockSpec((block_rows, lanes), imap)]
+    operands = [x]
+    base_mix = "fma" if mix.startswith("fma") else mix
+    if base_mix == "mxu":
+        w = jnp.eye(lanes, dtype=x.dtype)
+        in_specs.append(pl.BlockSpec((lanes, lanes), lambda i: (0, 0)))
+        operands.append(w)
+
+    if base_mix == "copy":
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(n_blocks,),
+            in_specs=in_specs[:1],
+            out_specs=pl.BlockSpec((block_rows, lanes), imap),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(x)
+
+    kern = functools.partial(_acc_kernel, base_mix, depth)
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(*operands)[0, 0]

@@ -1,0 +1,44 @@
+"""jit'd wrappers + work accounting for the membench Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.membench.membench import membench_call
+
+
+def make_kernel(mix: str = "load_sum", depth: int = 8, block_rows: int = 128,
+                streams: int = 1, interpret: bool = True):
+    """Returns jit'd fn(x) -> jax array (scalar or copy output)."""
+    depth_eff = depth
+    if mix.startswith("fma_"):
+        depth_eff = int(mix.split("_")[1])
+        mix = "fma"
+
+    @jax.jit
+    def fn(x):
+        return membench_call(x, mix=mix, depth=depth_eff,
+                             block_rows=block_rows, streams=streams,
+                             interpret=interpret)
+
+    return fn
+
+
+def work_per_call(mix: str, x, depth: int = 8) -> tuple[float, float]:
+    """(bytes, flops) moved/executed by one kernel invocation."""
+    nbytes = float(x.size * x.dtype.itemsize)
+    n = float(x.size)
+    if mix == "load_only":
+        return nbytes, 0.0
+    if mix == "load_sum":
+        return nbytes, n
+    if mix == "copy":
+        return 2 * nbytes, 0.0
+    if mix.startswith("fma"):
+        d = int(mix.split("_")[1]) if "_" in mix else depth
+        return nbytes, 2.0 * d * n
+    if mix == "mxu":
+        return nbytes, 2.0 * 128 * n
+    raise KeyError(mix)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the membench Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_load_only(x):
+    return x.astype(jnp.float32)[0, 0]
+
+
+def ref_load_sum(x):
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def ref_copy(x):
+    return x
+
+
+def ref_fma(x, depth: int):
+    v = x.astype(jnp.float32)
+    a = jnp.float32(1.0000001)
+    b = jnp.float32(1e-9)
+    for _ in range(depth):
+        v = v * a + b
+    return jnp.sum(v)
+
+
+def ref_mxu(x, block_rows: int):
+    """Per-block (rows,128)@(128,128)->sum of [0,0] column block, accumulated."""
+    rows, lanes = x.shape
+    w = jnp.eye(lanes, dtype=x.dtype)
+    total = jnp.float32(0.0)
+    for i in range(rows // block_rows):
+        blk = x[i * block_rows:(i + 1) * block_rows].astype(jnp.float32)
+        y = jnp.dot(blk, w.astype(jnp.float32))
+        total = total + y[0, 0]
+    return total
+
+
+def reference(mix: str, x, depth: int = 8, block_rows: int = 128):
+    if mix == "load_only":
+        # accumulated over blocks: one lane per block
+        rows = x.shape[0]
+        n = rows // block_rows
+        idx = [i * block_rows for i in range(n)]
+        return jnp.sum(x.astype(jnp.float32)[jnp.array(idx), 0])
+    if mix == "load_sum":
+        return ref_load_sum(x)
+    if mix == "copy":
+        return ref_copy(x)
+    if mix.startswith("fma"):
+        return ref_fma(x, depth)
+    if mix == "mxu":
+        return ref_mxu(x, block_rows)
+    raise KeyError(mix)

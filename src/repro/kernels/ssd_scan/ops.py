@@ -1,0 +1,20 @@
+"""jit'd wrapper for the SSD kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xdt, dA, Bm, Cm, chunk: int = 256, interpret: bool = True):
+    return ssd_scan(xdt, dA, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def flops(BH: int, S: int, P: int, N: int, chunk: int) -> float:
+    """Per forward: intra 2*Q*Q*(N+P) + state 2*Q*N*P + off 2*Q*N*P per chunk."""
+    nc = S // chunk
+    per_chunk = 2 * chunk * chunk * (N + P) + 4 * chunk * N * P
+    return float(BH * nc * per_chunk)

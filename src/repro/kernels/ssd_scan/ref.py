@@ -1,0 +1,27 @@
+"""Oracle for the SSD kernel: sequential state-space recurrence in f64-ish f32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(xdt, dA, Bm, Cm):
+    """Token-by-token recurrence: h_t = exp(dA_t) h_{t-1} + B_t x_t^T;
+    y_t = C_t . h_t.  xdt: (BH, S, P); dA: (BH, S); Bm/Cm: (BH, S, N)."""
+    BH, S, P = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, dA_t, b_t, c_t = inp
+        h = jnp.exp(dA_t)[:, None, None] * h + \
+            b_t[:, :, None] * x_t[:, None, :]          # (BH, N, P)
+        y = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (xdt.astype(jnp.float32).swapaxes(0, 1),
+          dA.astype(jnp.float32).swapaxes(0, 1),
+          Bm.astype(jnp.float32).swapaxes(0, 1),
+          Cm.astype(jnp.float32).swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h

@@ -1,0 +1,96 @@
+"""Mamba2 SSD — Pallas TPU kernel (full forward: intra-chunk + recurrence).
+
+Grid (B*H, n_chunks) with the chunk axis innermost: TPU grids execute
+sequentially per core, so the running SSM state lives in VMEM scratch across
+chunk steps and the inter-chunk recurrence costs no extra HBM traffic — the
+kernel fuses what the XLA path does as einsums + a lax.scan.  This is the
+hardware-adaptation story of DESIGN.md §2: the A64FX insight "keep the
+load/store units saturated" becomes "keep the chunk state VMEM-resident".
+
+Layout: per-head streams (B*H, S, ·) so one grid row owns one head's sequence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(nc: int, x_ref, dA_ref, b_ref, c_ref, y_ref, st_ref, state_scr):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P) already dt-weighted
+    dA = dA_ref[0].astype(jnp.float32)        # (Q,)
+    B = b_ref[0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+    Q = x.shape[0]
+
+    cum = jnp.cumsum(dA)                      # (Q,)
+    seg = cum[:, None] - cum[None, :]         # (Qi, Qj)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Qi, Qj)
+    y = jax.lax.dot_general(CB * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # off-diagonal: contribution of the carried state
+    state = state_scr[...]                    # (N, P)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: state' = exp(cum_last) * state + sum_j decay_out_j B_j x_j^T
+    decay_out = jnp.exp(cum[-1] - cum)        # (Q,)
+    upd = jax.lax.dot_general(B * decay_out[:, None], x,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    state_scr[...] = state * jnp.exp(cum[-1]) + upd
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _():
+        st_ref[0] = state_scr[...].astype(st_ref.dtype)
+
+
+def ssd_scan(xdt, dA, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+    """xdt: (BH, S, P) dt-weighted inputs; dA: (BH, S); Bm/Cm: (BH, S, N).
+
+    Returns (y (BH, S, P), final_state (BH, N, P)).
+    """
+    BH, S, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    kern = functools.partial(_ssd_kernel, nc)
+    y, st = pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q), lambda b, c: (b, c)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), xdt.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xdt, dA, Bm, Cm)
+    return y, st

@@ -1,0 +1,183 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the production
+meshes with 512 placeholder host devices, and extract roofline terms.
+
+MUST be executed as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line below runs before any other import so the forced device count
+takes effect at first jax init.  Never import this module from tests.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, list_archs, param_count  # noqa: E402
+from repro.distributed.sharding import ShardCtx                      # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+from repro.models.common import abstract_params, logical_axes        # noqa: E402
+from repro.models.registry import build, cache_abstract, input_abstract  # noqa: E402
+from repro.models.variant import VARIANTS, Variant                   # noqa: E402
+from repro.roofline.analyze import analyze                           # noqa: E402
+from repro.train.step import (make_decode_step, make_prefill_step,   # noqa: E402
+                              make_train_step)
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+HBM_PER_DEVICE = 16 * 2**30  # v5e
+
+
+def _replicated(mesh, sds):
+    return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                sharding=NamedSharding(mesh, P()))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, variant_name: str,
+               compile_only: bool = False):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "variant": variant_name, "status": "skipped", "reason": reason}
+
+    variant = VARIANTS[variant_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardCtx(mesh)
+    from repro.models.variant import apply_rules
+    apply_rules(ctx, variant)
+    model = build(cfg)
+
+    specs = model.param_specs()
+    p_abs = ctx.tree_abstract(abstract_params(specs), logical_axes(specs))
+    if shape.kind in ("prefill", "decode"):
+        # serving holds bf16 weights (production standard; f32 is a train-only
+        # luxury) — halves the serving footprint of the 200B+ archs.
+        p_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16,
+                                           sharding=s.sharding), p_abs)
+    batch_abs, batch_axes = input_abstract(cfg, shape)
+    b_abs = ctx.tree_abstract(batch_abs, batch_axes)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step_fn = make_train_step(cfg, ctx, variant=variant)
+            mdt = jnp.dtype(variant.adam_dtype)
+            mom = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, mdt, sharding=s.sharding),
+                p_abs)
+            o_abs = {"mu": mom, "nu": mom,
+                     "step": _replicated(mesh, jax.ShapeDtypeStruct((), jnp.int32))}
+            lowered = jax.jit(step_fn, donate_argnums=(0, 1)).lower(
+                p_abs, o_abs, b_abs)
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg, ctx, variant=variant)
+            lowered = jax.jit(step_fn).lower(p_abs, b_abs)
+        else:  # decode
+            dp = ctx.axis_size(*ctx.dp_axes)
+            seq_shard = (shape.global_batch % dp) != 0
+            step_fn = make_decode_step(cfg, ctx, variant=variant,
+                                       seq_shard_decode=seq_shard)
+            c_abs_raw, c_axes = cache_abstract(cfg, shape.global_batch,
+                                               shape.seq_len)
+            c_abs = ctx.tree_abstract(c_abs_raw, c_axes)
+            cache_dt = jnp.dtype(variant.kv_cache_dtype)
+            if cache_dt != jnp.bfloat16:
+                c_abs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, cache_dt,
+                                                   sharding=s.sharding)
+                    if s.dtype == jnp.bfloat16 else s, c_abs)
+            pos = _replicated(mesh, jax.ShapeDtypeStruct((), jnp.int32))
+            lowered = jax.jit(step_fn, donate_argnums=(1,)).lower(
+                p_abs, c_abs, b_abs, pos)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    total, active = param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops_global = mult * active * tokens
+    n_dev = mesh.devices.size
+    rec = analyze(compiled, model_flops=model_flops_global / n_dev)
+    rec.update({
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "variant": variant_name, "status": "ok",
+        "mesh": dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))),
+        "n_devices": int(n_dev),
+        "params_total": total, "params_active": active,
+        "tokens_per_step": tokens,
+        "fits_hbm": rec_fits(rec),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "sharding_fallbacks": sorted(set(ctx.fallbacks)),
+    })
+    return rec
+
+
+def rec_fits(rec) -> bool:
+    return rec["peak_device_bytes"] <= HBM_PER_DEVICE
+
+
+def cell_path(arch, shape_name, multi_pod, variant) -> Path:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    return ART / f"{arch}__{shape_name}__{mesh_tag}__{variant}.json"
+
+
+def run_cell(arch, shape_name, multi_pod, variant, force=False) -> dict:
+    out = cell_path(arch, shape_name, multi_pod, variant)
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, variant)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "variant": variant, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, args.variant, force=args.force)
+                status = rec.get("status")
+                tag = f"{arch} x {shape} x {'pod2' if mp else 'pod1'} x {args.variant}"
+                if status == "ok":
+                    print(f"[ok]   {tag}: dominant={rec['dominant']} "
+                          f"t=({rec['t_compute_s']:.4f},{rec['t_memory_s']:.4f},"
+                          f"{rec['t_collective_s']:.4f})s "
+                          f"peak={rec['peak_device_bytes']/2**30:.2f}GiB "
+                          f"fits={rec['fits_hbm']} ({time.time()-t0:.0f}s)")
+                elif status == "skipped":
+                    print(f"[skip] {tag}: {rec['reason']}")
+                else:
+                    print(f"[ERR]  {tag}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,512 @@
+"""Per-layer roofline cost probes.
+
+XLA-CPU's ``cost_analysis`` counts a ``while`` body ONCE regardless of trip
+count (verified: a scan of 10 matmuls reports 1 matmul of flops) — so the
+rolled dry-run program under-reports flops/bytes/collectives by ~n_layers.
+This module lowers each *part* of a step once, with inner scans unrolled
+(attention q/kv blocks, xent chunks), and composes totals analytically:
+
+    train:   total = L x (grad(layer) + fwd(layer))   [+fwd = remat recompute]
+                   + grad(head) + fwd(head) + optimizer(analytic)
+    prefill: total = L x fwd(layer) + fwd(head)
+    decode:  total = L x fwd(layer_decode) + fwd(head)
+
+The rolled lowering (launch/dryrun.py) remains the compile + memory-fit proof;
+records produced here carry ``"source": "probe"`` and feed §Roofline/§Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from dataclasses import replace  # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, list_archs, param_count  # noqa: E402
+from repro.distributed.sharding import ShardCtx                      # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+from repro.models import attention as attn_mod                       # noqa: E402
+from repro.models.common import (abstract_params, apply_norm,        # noqa: E402
+                                 chunked_softmax_xent, embed_specs,
+                                 embed_tokens, lm_logits, logical_axes,
+                                 norm_specs)
+from repro.models.registry import build                              # noqa: E402
+from repro.models.variant import VARIANTS, Variant                   # noqa: E402
+from repro.roofline.analyze import (CollectiveOp, RooflineTerms,     # noqa: E402
+                                    parse_collectives)
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "probe"
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def _cost(fn, args_abs, mesh):
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn).lower(*args_abs).compile()
+    c = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {"flops": float(c.get("flops", 0.0)),
+            "bytes": float(c.get("bytes accessed", 0.0)),
+            "colls": colls}
+
+
+def _zero():
+    return {"flops": 0.0, "bytes": 0.0, "colls": []}
+
+
+def _add(a, b, mult=1.0):
+    return {"flops": a["flops"] + mult * b["flops"],
+            "bytes": a["bytes"] + mult * b["bytes"],
+            "colls": a["colls"] + [CollectiveOp(c.kind,
+                                                int(c.bytes * mult),
+                                                c.group_size)
+                                   for c in b["colls"]]}
+
+
+def _scalarize(tree):
+    return sum(jnp.sum(x.astype(jnp.float32)) for x in jax.tree.leaves(tree))
+
+
+def _train_part(fwd_fn, args_abs, mesh, remat: str = "full",
+                cast_params: bool = False):
+    """Training-visit cost of one part.
+
+    remat=full: grad(part) + fwd(part)   (backward recomputes the forward)
+    else:       grad(part)               (dots policy keeps matmul outputs)
+    cast_params=True casts f32 weight args to bf16 inside the probed fn so the
+    FSDP all-gathers in the lowered part carry bf16 (mirrors train_step).
+    """
+    def maybe_cast(args):
+        if not cast_params:
+            return args
+        return tuple(jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (hasattr(p, "dtype") and p.dtype == jnp.float32 and p.ndim > 1)
+            else p, a) for a in args)
+
+    def loss(*args):
+        return _scalarize(fwd_fn(*maybe_cast(args)))
+    fwd = _cost(loss, args_abs, mesh)
+    # differentiate only w.r.t. float-valued args (tokens/labels are int32)
+    argnums = tuple(
+        i for i, a in enumerate(args_abs)
+        if all(jnp.issubdtype(l.dtype, jnp.inexact)
+               for l in jax.tree.leaves(a)))
+    grad = _cost(jax.grad(loss, argnums=argnums), args_abs, mesh)
+    return _add(fwd, grad) if remat == "full" else grad
+
+
+def _abs(ctx, shape, axes, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype,
+                                sharding=ctx.sharding(tuple(shape), tuple(axes)))
+
+
+def _layer_abstract(ctx, model_specs_subtree):
+    return ctx.tree_abstract(abstract_params(model_specs_subtree),
+                             logical_axes(model_specs_subtree))
+
+
+def _unstack(stacked_specs_tree):
+    """Strip the leading (layers/sites,) dim off a stacked spec tree."""
+    from repro.models.common import ParamSpec, spec_map
+    return spec_map(lambda s: ParamSpec(s.shape[1:], s.axes[1:], s.init,
+                                        s.scale, s.dtype), stacked_specs_tree)
+
+
+# ---------------------------------------------------------------------------
+# per-family parts
+# ---------------------------------------------------------------------------
+
+def probe_parts(cfg, shape, ctx, variant):
+    """Returns list of (name, multiplier, cost_dict)."""
+    mesh = ctx.mesh
+    model = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    pv0 = variant
+    pv = replace(variant, unroll=True, remat="none",
+                 kv_block=max(variant.kv_block,
+                              2048 if S >= 32768 else variant.kv_block))
+    cache_dt = jnp.dtype(variant.kv_cache_dtype)
+
+    def cache_cast(abs_tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, cache_dt,
+                                           sharding=s.sharding)
+            if s.dtype == jnp.bfloat16 else s, abs_tree)
+    kind = shape.kind
+    parts = []
+    positions = None  # models default to arange
+
+    x_abs = _abs(ctx, (B, S, D), ("batch", "act_seq", None))
+    tok_abs = _abs(ctx, (B, S), ("batch", "seq"), jnp.int32)
+
+    def head_fn(emb_p, lnf_p, h, tokens, labels):
+        x0 = embed_tokens(emb_p, tokens)
+        h = apply_norm(cfg, lnf_p, h + 0 * x0)
+        return chunked_softmax_xent(cfg, emb_p, h, labels,
+                                    chunk=pv.xent_chunk, unroll=True)
+
+    emb_abs = _layer_abstract(ctx, embed_specs(cfg))
+    lnf_abs = _layer_abstract(ctx, norm_specs(cfg, D))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        lp_abs = _layer_abstract(ctx, model.block_specs())
+        if kind == "train":
+            fn = lambda lp, x: model._block(lp, x, ctx, pv, jnp.arange(S))[0]
+            parts.append(("layer", cfg.n_layers,
+                          _train_part(fn, (lp_abs, x_abs), mesh, pv0.remat, pv0.cast_params)))
+            parts.append(("head", 1, _train_part(
+                head_fn, (emb_abs, lnf_abs, x_abs, tok_abs, tok_abs), mesh,
+                pv0.remat, pv0.cast_params)))
+        elif kind == "prefill":
+            fn = lambda lp, x: model._block(lp, x, ctx, pv, jnp.arange(S))[0]
+            parts.append(("layer", cfg.n_layers,
+                          _cost(lambda lp, x: _scalarize(fn(lp, x)),
+                                (lp_abs, x_abs), mesh)))
+        else:  # decode
+            cshapes = model.cache_shapes(B, S)
+            c_abs = cache_cast({k: _abs(ctx, v[0], v[1], v[2])
+                                for k, v in cshapes.items()})
+            x1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+            from repro.models import mla as mla_mod
+
+            def dec_fn(lp, cache, x):
+                h = apply_norm(cfg, lp["ln1"], x)
+                if model.is_mla:
+                    a, c2, k2 = mla_mod.mla_decode(cfg, lp["attn"], h,
+                                                   cache["c"], cache["k_rope"],
+                                                   jnp.int32(S - 1))
+                    extra = (c2, k2)
+                else:
+                    a, ck, cv = attn_mod.gqa_decode(cfg, lp["attn"], h,
+                                                    cache["k"], cache["v"],
+                                                    jnp.int32(S - 1))
+                    extra = (ck, cv)
+                x = x + a
+                h2 = apply_norm(cfg, lp["ln2"], x)
+                if model.is_moe:
+                    from repro.models import moe as moe_mod
+                    y, _ = moe_mod.moe_layer(ctx, cfg, lp["moe"], h2,
+                                             psum_dtype=pv.psum_dtype)
+                else:
+                    from repro.models.common import apply_mlp
+                    y = apply_mlp(cfg, lp["mlp"], h2)
+                return _scalarize(x + y) + sum(_scalarize(e[:, -1:]) for e in extra)
+
+            parts.append(("layer_decode", cfg.n_layers,
+                          _cost(dec_fn, (lp_abs, c_abs, x1), mesh)))
+            h1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+            parts.append(("head_decode", 1, _cost(
+                lambda e, h: _scalarize(lm_logits(cfg, e, h)), (emb_abs, h1),
+                mesh)))
+
+    elif cfg.family == "ssm":
+        from repro.models.ssm import ssm_block, ssm_cache_shapes, ssm_decode, ssm_specs
+        lp_abs = _layer_abstract(
+            ctx, {"ln": norm_specs(cfg, D), "ssm": ssm_specs(cfg)})
+        if kind in ("train", "prefill"):
+            fn = lambda lp, x: x + ssm_block(
+                cfg, lp["ssm"], apply_norm(cfg, lp["ln"], x), ctx)
+            if kind == "train":
+                parts.append(("layer", cfg.n_layers,
+                              _train_part(fn, (lp_abs, x_abs), mesh, pv0.remat, pv0.cast_params)))
+                parts.append(("head", 1, _train_part(
+                    head_fn, (emb_abs, lnf_abs, x_abs, tok_abs, tok_abs), mesh)))
+            else:
+                parts.append(("layer", cfg.n_layers,
+                              _cost(lambda lp, x: _scalarize(fn(lp, x)),
+                                    (lp_abs, x_abs), mesh)))
+        else:
+            cshapes = ssm_cache_shapes(cfg, B)
+            c_abs = {k: _abs(ctx, v[0], v[1], v[2]) for k, v in cshapes.items()}
+            x1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+
+            def dec_fn(lp, cache, x):
+                y, c2 = ssm_decode(cfg, lp["ssm"],
+                                   apply_norm(cfg, lp["ln"], x), cache)
+                return _scalarize(x + y) + _scalarize(c2["state"][:, :1])
+
+            parts.append(("layer_decode", cfg.n_layers,
+                          _cost(dec_fn, (lp_abs, c_abs, x1), mesh)))
+            h1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+            parts.append(("head_decode", 1, _cost(
+                lambda e, h: _scalarize(lm_logits(cfg, e, h)), (emb_abs, h1),
+                mesh)))
+
+    elif cfg.family == "hybrid":
+        from repro.models.ssm import ssm_block, ssm_cache_shapes, ssm_decode, ssm_specs
+        mp_abs = _layer_abstract(
+            ctx, {"ln": norm_specs(cfg, D), "ssm": ssm_specs(cfg)})
+        sb_abs = _layer_abstract(ctx, {
+            "ln1": norm_specs(cfg, D), "attn": attn_mod.gqa_specs(cfg, D),
+            "ln2": norm_specs(cfg, D),
+            "mlp": __import__("repro.models.common",
+                              fromlist=["mlp_specs"]).mlp_specs(cfg, D, cfg.d_ff)})
+        sn_abs = _layer_abstract(ctx, norm_specs(cfg, D))
+        n_sites = cfg.n_layers // cfg.attn_every
+        model_h = build(cfg)
+
+        if kind in ("train", "prefill"):
+            mb = lambda lp, x: x + ssm_block(
+                cfg, lp["ssm"], apply_norm(cfg, lp["ln"], x), ctx)
+
+            def sb(sp, sn, x):
+                return model_h._shared_block({"shared": sp}, sn, x, ctx, pv,
+                                             jnp.arange(S))
+            if kind == "train":
+                parts.append(("mamba_layer", cfg.n_layers,
+                              _train_part(mb, (mp_abs, x_abs), mesh, pv0.remat, pv0.cast_params)))
+                parts.append(("shared_block", n_sites,
+                              _train_part(sb, (sb_abs, sn_abs, x_abs), mesh, pv0.remat, pv0.cast_params)))
+                parts.append(("head", 1, _train_part(
+                    head_fn, (emb_abs, lnf_abs, x_abs, tok_abs, tok_abs), mesh)))
+            else:
+                parts.append(("mamba_layer", cfg.n_layers, _cost(
+                    lambda lp, x: _scalarize(mb(lp, x)), (mp_abs, x_abs), mesh)))
+                parts.append(("shared_block", n_sites, _cost(
+                    lambda sp, sn, x: _scalarize(sb(sp, sn, x)),
+                    (sb_abs, sn_abs, x_abs), mesh)))
+        else:
+            cshapes = ssm_cache_shapes(cfg, B)
+            sc_abs = {k: _abs(ctx, v[0], v[1], v[2]) for k, v in cshapes.items()}
+            hd = cfg.resolved_head_dim
+            k_abs = cache_cast(_abs(ctx, (B, S, cfg.n_kv_heads, hd),
+                                    ("batch", "kv_seq", "kv_heads", None)))
+            x1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+            dp = ctx.axis_size(*ctx.dp_axes)
+            seq_shard = (B % dp) != 0
+
+            def mdec(lp, cache, x):
+                y, c2 = ssm_decode(cfg, lp["ssm"],
+                                   apply_norm(cfg, lp["ln"], x), cache)
+                return _scalarize(x + y) + _scalarize(c2["state"][:, :1])
+
+            def sdec(sp, sn, ck, cv, x):
+                h = apply_norm(cfg, sn, x)
+                h1 = apply_norm(cfg, sp["ln1"], h)
+                if seq_shard:
+                    from repro.serve.flash_decode import seq_sharded_gqa_decode
+                    a, k2, v2 = seq_sharded_gqa_decode(ctx, cfg, sp["attn"], h1,
+                                                       ck, cv, jnp.int32(S - 1))
+                else:
+                    a, k2, v2 = attn_mod.gqa_decode(cfg, sp["attn"], h1, ck, cv,
+                                                    jnp.int32(S - 1))
+                return _scalarize(x + a) + _scalarize(k2[:, -1:]) + \
+                    _scalarize(v2[:, -1:])
+
+            parts.append(("mamba_decode", cfg.n_layers,
+                          _cost(mdec, (mp_abs, sc_abs, x1), mesh)))
+            parts.append(("shared_decode", n_sites,
+                          _cost(sdec, (sb_abs, sn_abs, k_abs, k_abs, x1), mesh)))
+            h1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+            parts.append(("head_decode", 1, _cost(
+                lambda e, h: _scalarize(lm_logits(cfg, e, h)), (emb_abs, h1),
+                mesh)))
+
+    elif cfg.family == "encdec":
+        A = cfg.n_audio_ctx
+        frames_abs = _abs(ctx, (B, A, D), ("batch", None, None))
+        enc_abs = _layer_abstract(ctx, {
+            "ln1": norm_specs(cfg, D), "attn": attn_mod.gqa_specs(cfg, D),
+            "ln2": norm_specs(cfg, D),
+            "mlp": __import__("repro.models.common",
+                              fromlist=["mlp_specs"]).mlp_specs(cfg, D, cfg.d_ff)})
+        dec_abs = _layer_abstract(ctx, {
+            "ln1": norm_specs(cfg, D), "self_attn": attn_mod.gqa_specs(cfg, D),
+            "ln_x": norm_specs(cfg, D), "cross_attn": attn_mod.gqa_specs(cfg, D),
+            "ln2": norm_specs(cfg, D),
+            "mlp": __import__("repro.models.common",
+                              fromlist=["mlp_specs"]).mlp_specs(cfg, D, cfg.d_ff)})
+        model_e = build(cfg)
+
+        def enc_fn(lp, x):
+            h = apply_norm(cfg, lp["ln1"], x)
+            a = attn_mod.gqa_attention(cfg, lp["attn"], h, causal=False,
+                                       kv_block=pv.kv_block, ctx=ctx,
+                                       unroll=True)
+            x = x + a
+            h = apply_norm(cfg, lp["ln2"], x)
+            from repro.models.common import apply_mlp
+            return x + apply_mlp(cfg, lp["mlp"], h)
+
+        def dec_fn(lp, x, enc_out):
+            return model_e._dec_block(lp, x, enc_out, ctx, pv, jnp.arange(S))
+
+        if kind == "train":
+            parts.append(("enc_layer", cfg.n_encoder_layers,
+                          _train_part(enc_fn, (enc_abs, frames_abs), mesh, pv0.remat, pv0.cast_params)))
+            parts.append(("dec_layer", cfg.n_layers,
+                          _train_part(dec_fn, (dec_abs, x_abs, frames_abs),
+                                      mesh, pv0.remat, pv0.cast_params)))
+            parts.append(("head", 1, _train_part(
+                head_fn, (emb_abs, lnf_abs, x_abs, tok_abs, tok_abs), mesh,
+                pv0.remat, pv0.cast_params)))
+        elif kind == "prefill":
+            parts.append(("enc_layer", cfg.n_encoder_layers, _cost(
+                lambda lp, x: _scalarize(enc_fn(lp, x)), (enc_abs, frames_abs),
+                mesh)))
+            parts.append(("dec_layer", cfg.n_layers, _cost(
+                lambda lp, x, e: _scalarize(dec_fn(lp, x, e)),
+                (dec_abs, x_abs, frames_abs), mesh)))
+        else:  # decode
+            hd = cfg.resolved_head_dim
+            kv = cfg.n_kv_heads
+            k_abs = cache_cast(_abs(ctx, (B, S, kv, hd),
+                                    ("batch", "kv_seq", "kv_heads", None)))
+            xk_abs = _abs(ctx, (B, A, kv, hd), ("batch", None, "kv_heads",
+                                                None))
+            x1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+
+            def ddec(lp, ck, cv, xk, xv, x):
+                h = apply_norm(cfg, lp["ln1"], x)
+                a, k2, v2 = attn_mod.gqa_decode(cfg, lp["self_attn"], h, ck, cv,
+                                                jnp.int32(S - 1))
+                x = x + a
+                h = apply_norm(cfg, lp["ln_x"], x)
+                q, _, _ = attn_mod.gqa_project_qkv(cfg, lp["cross_attn"], h,
+                                                   jnp.zeros((B, 1), jnp.int32),
+                                                   None)
+                o = attn_mod.chunked_attention(q, xk, xv, causal=False,
+                                               kv_block=1024, unroll=True)
+                from repro.models.common import apply_mlp, cast_compute
+                x = x + jnp.einsum("bshk,hkd->bsd", o,
+                                   cast_compute(lp["cross_attn"]["wo"])
+                                   ).astype(x.dtype)
+                h = apply_norm(cfg, lp["ln2"], x)
+                x = x + apply_mlp(cfg, lp["mlp"], h)
+                return _scalarize(x) + _scalarize(k2[:, -1:]) + \
+                    _scalarize(v2[:, -1:])
+
+            parts.append(("dec_layer_decode", cfg.n_layers,
+                          _cost(ddec, (dec_abs, k_abs, k_abs, xk_abs, xk_abs,
+                                       x1), mesh)))
+            h1 = _abs(ctx, (B, 1, D), ("batch", None, None))
+            parts.append(("head_decode", 1, _cost(
+                lambda e, h: _scalarize(lm_logits(cfg, e, h)), (emb_abs, h1),
+                mesh)))
+    else:
+        raise ValueError(cfg.family)
+
+    # optimizer part (train only): elementwise AdamW, fully sharded => analytic
+    if kind == "train":
+        total_p, _ = param_count(cfg)
+        p_local = total_p / ctx.mesh.devices.size
+        parts.append(("optimizer", 1, {"flops": 15.0 * p_local,
+                                       "bytes": 28.0 * p_local, "colls": []}))
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# composition + CLI
+# ---------------------------------------------------------------------------
+
+def probe_cell(arch: str, shape_name: str, multi_pod: bool, variant_name: str):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "variant": variant_name, "status": "skipped", "reason": reason,
+                "source": "probe"}
+    variant = VARIANTS[variant_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardCtx(mesh)
+    from repro.models.variant import apply_rules
+    apply_rules(ctx, variant)
+    t0 = time.time()
+    parts = probe_parts(cfg, shape, ctx, variant)
+    total = _zero()
+    part_summary = {}
+    for name, mult, cost in parts:
+        total = _add(total, cost, mult)
+        part_summary[name] = {"mult": mult, "flops": cost["flops"],
+                              "bytes": cost["bytes"],
+                              "coll_bytes": sum(c.bytes for c in cost["colls"])}
+    from repro.roofline.model_bytes import analytic_bytes
+    hbm_model = analytic_bytes(cfg, shape, ctx.mesh.devices.size,
+                               tp=ctx.axis_size("model"),
+                               dp=ctx.axis_size(*ctx.dp_axes),
+                               cache_bytes_per_elem=jnp.dtype(
+                                   variant.kv_cache_dtype).itemsize,
+                               train_passes=3 if variant.remat == "full" else 2)
+    terms = RooflineTerms(flops=total["flops"], hbm_bytes=hbm_model,
+                          collectives=total["colls"])
+    totals, active = param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult_f = 6 if shape.kind == "train" else 2
+    model_flops = mult_f * active * tokens / mesh.devices.size
+    rec = {
+        **terms.summary(),
+        "hbm_bytes_upper": total["bytes"],   # no-fusion cost-model bound
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "variant": variant_name, "status": "ok", "source": "probe",
+        "model_flops": model_flops,
+        "useful_flop_ratio": model_flops / total["flops"] if total["flops"] else 0,
+        "parts": part_summary,
+        "probe_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def cell_path(arch, shape_name, multi_pod, variant) -> Path:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    return ART / f"{arch}__{shape_name}__{mesh_tag}__{variant}.json"
+
+
+def run_cell(arch, shape_name, multi_pod, variant, force=False):
+    out = cell_path(arch, shape_name, multi_pod, variant)
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    try:
+        rec = probe_cell(arch, shape_name, multi_pod, variant)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "variant": variant, "status": "error", "source": "probe",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = list_archs() if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, args.variant, force=args.force)
+                tag = f"{arch} x {shape} x {'pod2' if mp else 'pod1'} x {args.variant}"
+                if rec["status"] == "ok":
+                    print(f"[ok]   {tag}: dom={rec['dominant']} "
+                          f"t=({rec['t_compute_s']:.4f},{rec['t_memory_s']:.4f},"
+                          f"{rec['t_collective_s']:.4f})s "
+                          f"useful={rec['useful_flop_ratio']:.2f} "
+                          f"({time.time()-t0:.0f}s)")
+                elif rec["status"] == "skipped":
+                    print(f"[skip] {tag}")
+                else:
+                    print(f"[ERR]  {tag}: {rec['error'][:160]}")
+
+
+if __name__ == "__main__":
+    main()

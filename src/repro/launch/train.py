@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --batch 8 --seq 256 --steps 100
+
+Production posture: on a real multi-host slice the same entry point runs under
+``jax.distributed.initialize()`` (one process per host); mesh axes come from
+--mesh.  On this container it runs single-process (optionally with forced host
+devices via --force-devices, set before jax init).
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-scale reduced config")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="1,1,1",
+                    help="pod,data,model axis sizes")
+    ap.add_argument("--force-devices", type=int, default=0,
+                    help="force N host devices (set before jax init)")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.force_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.force_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    from repro.configs import get_arch, reduced
+    from repro.launch.mesh import make_mesh
+    from repro.models.variant import VARIANTS
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    mesh = make_mesh(shape, ("pod", "data", "model")[:len(shape)]
+                     if len(shape) == 3 else ("data", "model"))
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        opt=adamw.AdamWConfig(lr=args.lr, total_steps=args.steps))
+    trainer = Trainer(cfg, (args.batch, args.seq), mesh, tcfg,
+                      variant=VARIANTS[args.variant])
+    _, _, hist = trainer.train(resume=not args.no_resume)
+    if hist:
+        print(f"final loss: {hist[-1]['loss']:.4f} "
+              f"(from {hist[0]['loss']:.4f} @ step {hist[0]['step']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,288 @@
+"""Attention: GQA with (partial) RoPE, chunked online-softmax, MLA, decode paths.
+
+The XLA implementation (``chunked_attention``) is the default everywhere: it is the
+pure-jnp oracle for the Pallas flash kernel and keeps peak memory O(S * block)
+instead of O(S^2), which is what lets 32k-token prefill *fit* in the dry-run.
+``implementation='pallas'`` switches the hot spot to kernels/flash_attention on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, cast_compute, rms_norm
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rope_pct: float, theta: float):
+    rot = int(head_dim * rope_pct) // 2 * 2
+    if rot == 0:
+        return None
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x, positions, inv_freq):
+    """x: (B, S, H, Dh); positions: (B, S) or (S,). Rotates the first rot dims."""
+    if inv_freq is None:
+        return x
+    rot = inv_freq.shape[0] * 2
+    xf = x.astype(jnp.float32)
+    x_rot, x_pass = xf[..., :rot], xf[..., rot:]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq[None, None, :]  # (B,S,r/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    x_rot = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([x_rot, x_pass], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (flash-style, XLA path)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, kv_block: int = 1024,
+                      q_block: int = 1024, q_positions=None, kv_positions=None,
+                      ctx=None, unroll: bool = False):
+    """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh|Dv).  GQA via head repetition at the
+    einsum level (no materialized repeat).  Returns (B, Sq, H, Dv).
+
+    Online softmax, blocked over BOTH query and KV: temporaries are
+    O(q_block * kv_block) per head, never O(Sq * Sk).  ``ctx`` adds
+    heads->model sharding constraints (Megatron-style TP attention).
+    """
+    if ctx is not None:
+        q, k, v = _constrain_qkv(ctx, q, k, v)
+    B, Sq, H, Dh = q.shape
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    # outer blocking over queries (scan) when the sequence is long
+    if Sq > q_block and Sq % q_block == 0:
+        nqb = Sq // q_block
+        qs = q.reshape(B, nqb, q_block, H, Dh).swapaxes(0, 1)
+        qps = q_positions.reshape(nqb, q_block)
+
+        def q_body(_, blk):
+            q_b, qp_b = blk
+            o = _kv_scan_attention(q_b, k, v, causal=causal, kv_block=kv_block,
+                                   q_positions=qp_b, kv_positions=kv_positions,
+                                   unroll=unroll)
+            return None, o
+
+        _, outs = jax.lax.scan(q_body, None, (qs, qps), unroll=unroll)
+        out = outs.swapaxes(0, 1).reshape(B, Sq, H, -1)
+        if ctx is not None:
+            out = _constrain_attn_out(ctx, out)
+        return out
+    out = _kv_scan_attention(q, k, v, causal=causal, kv_block=kv_block,
+                             q_positions=q_positions, kv_positions=kv_positions,
+                             unroll=unroll)
+    if ctx is not None:
+        out = _constrain_attn_out(ctx, out)
+    return out
+
+
+def _constrain_qkv(ctx, q, k, v):
+    """Megatron TP: heads -> model.  When the head count doesn't divide the
+    model axis (phi3: 40 heads / 16), fall back to sharding the *sequence* dim
+    over model so attention temporaries never replicate."""
+    H = q.shape[2]
+    if ctx.resolve_dim("act_heads", H) is not None:
+        q = ctx.constrain(q, "batch", None, "act_heads", None)
+        k = ctx.constrain(k, "batch", None, "kv_heads", None)
+        v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    else:
+        q = ctx.constrain(q, "batch", "act_seq", None, None)
+        k = ctx.constrain(k, "batch", "act_seq", None, None)
+        v = ctx.constrain(v, "batch", "act_seq", None, None)
+    return q, k, v
+
+
+def _constrain_attn_out(ctx, out):
+    if ctx.resolve_dim("act_heads", out.shape[2]) is not None:
+        return ctx.constrain(out, "batch", None, "act_heads", None)
+    return ctx.constrain(out, "batch", "act_seq", None, None)
+
+
+def _kv_scan_attention(q, k, v, *, causal: bool, kv_block: int,
+                       q_positions, kv_positions=None, unroll: bool = False):
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KV  # query heads per kv head
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    kv_block = min(kv_block, Sk)
+
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Sk)
+
+    # pad KV to a block multiple; padded slots masked out via kv_valid
+    pad = (-Sk) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=0)
+    kv_valid = jnp.arange(Sk + pad) < Sk
+    Sk = Sk + pad
+    n_blocks = Sk // kv_block
+
+    qc = cast_compute(q).reshape(B, Sq, KV, G, Dh)
+
+    # jax.checkpoint = the flash-attention backward: never save the (q, kb)
+    # score/prob blocks — recompute them from the saved block inputs.  Without
+    # this, scan's backward stacks every probability block (O(Sq*Sk) f32).
+    @jax.checkpoint
+    def body(carry, blk):
+        m, l, acc = carry
+        k_b, v_b, kpos_b, kval_b = blk  # (B,kb,KV,Dh), (B,kb,KV,Dv), (kb,), (kb,)
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qc, cast_compute(k_b),
+                       preferred_element_type=jnp.float32) * scale  # (B,KV,G,Sq,kb)
+        mask = kval_b[None, None, None, None, :]
+        if causal:
+            mask = mask & (q_positions[None, None, None, :, None]
+                           >= kpos_b[None, None, None, None, :])
+        # -1e30, not -inf: a fully-masked block would make m == -inf and
+        # exp(-inf - -inf) == nan in the online-softmax update.
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqj,bjkd->bkgqd", p.astype(cast_compute(v_b).dtype),
+                        cast_compute(v_b), preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, Dv), jnp.float32)
+
+    ks = k.reshape(B, n_blocks, kv_block, KV, Dh).swapaxes(0, 1)
+    vs = v.reshape(B, n_blocks, kv_block, KV, Dv).swapaxes(0, 1)
+    kps = kv_positions.reshape(n_blocks, kv_block)
+    kvs = kv_valid.reshape(n_blocks, kv_block)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps, kvs),
+                                  unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,KV,G,Sq,Dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def folded_causal_attention(q, k, v, *, q_block: int = 1024, kv_block: int = 1024,
+                            ctx=None, unroll: bool = False):
+    """Causal attention that does ~half the block work of ``chunked_attention``.
+
+    Scans query blocks; for query block i only KV blocks [0, i] are visited, by
+    slicing a *static* prefix via masking-free pairing: query block i processes
+    exactly (i+1) kv blocks through ``lax.fori``-style dynamic slice.  Work is
+    sum_i (i+1) = N(N+1)/2 blocks vs N^2 for the masked full scan.
+    """
+    if ctx is not None:
+        q, k, v = _constrain_qkv(ctx, q, k, v)
+    B, S, H, Dh = q.shape
+    assert S % q_block == 0 and S % kv_block == 0 and q_block == kv_block
+    nq = S // q_block
+    if nq <= 1:
+        return chunked_attention(q, k, v, causal=True, kv_block=kv_block)
+
+    # Each query block i only visits KV blocks [0, i]: total block-pairs
+    # nq(nq+1)/2 vs nq^2 for the masked full scan.  The per-i KV prefix length is
+    # static (trace-time python loop), so no masking waste and no dynamic shapes.
+    qs = q.reshape(B, nq, q_block, H, Dh)
+    outs = []
+    for i in range(nq):
+        kv_len = (i + 1) * kv_block
+        k_i = jax.lax.slice_in_dim(k, 0, kv_len, axis=1)
+        v_i = jax.lax.slice_in_dim(v, 0, kv_len, axis=1)
+        q_pos = jnp.arange(q_block) + i * q_block
+        outs.append(_kv_scan_attention(
+            qs[:, i], k_i, v_i, causal=True, kv_block=kv_block,
+            q_positions=q_pos, kv_positions=jnp.arange(kv_len), unroll=unroll))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (params + train/prefill/decode application)
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg, d: int) -> dict:
+    hd = cfg.resolved_head_dim
+    out = {
+        "wq": ParamSpec((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+        out["k_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+    return out
+
+
+def gqa_project_qkv(cfg, p: dict, x, positions, inv_freq):
+    xc = cast_compute(x)
+    q = jnp.einsum("bsd,dhk->bshk", xc, cast_compute(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", xc, cast_compute(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", xc, cast_compute(p["wv"]))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def gqa_attention(cfg, p: dict, x, *, causal: bool = True, positions=None,
+                  kv_block: int = 1024, variant: str = "masked", ctx=None,
+                  unroll: bool = False):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    inv_freq = rope_freqs(cfg.resolved_head_dim, cfg.rope_pct, cfg.rope_theta)
+    q, k, v = gqa_project_qkv(cfg, p, x, positions, inv_freq)
+    if causal and variant == "folded" and S > kv_block and S % kv_block == 0:
+        o = folded_causal_attention(q, k, v, q_block=kv_block, kv_block=kv_block,
+                                    ctx=ctx, unroll=unroll)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, kv_block=min(kv_block, S),
+                              ctx=ctx, unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", o, cast_compute(p["wo"])).astype(x.dtype)
+
+
+def gqa_decode(cfg, p: dict, x, cache_k, cache_v, pos):
+    """x: (B, 1, D); cache_(k|v): (B, Smax, KV, Dh); pos: scalar int32.
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B, _, D = x.shape
+    hd = cfg.resolved_head_dim
+    inv_freq = rope_freqs(hd, cfg.rope_pct, cfg.rope_theta)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = gqa_project_qkv(cfg, p, x, positions, inv_freq)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    Smax = cache_k.shape[1]
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    s = jnp.einsum("bkgd,bjkd->bkgj", cast_compute(q).reshape(B, KV, G, hd),
+                   cast_compute(cache_k), preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", w.astype(jnp.bfloat16), cast_compute(cache_v),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.n_heads, -1).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", cast_compute(o), cast_compute(p["wo"]))
+    return out.astype(x.dtype), cache_k, cache_v

@@ -1,0 +1,219 @@
+"""Shared model machinery: param specs, initializers, norms, MLPs, losses.
+
+Every model declares its parameters once as a pytree of ``ParamSpec`` — shape,
+logical sharding axes, and initializer.  Real init, abstract (dry-run) init, and
+sharding resolution all derive from that single declaration.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis names used across the zoo.  distributed/sharding.py maps these to
+# mesh axes (with divisibility-checked fallbacks).
+#   layers, vocab, embed, heads, kv_heads, head_dim, ffn, experts, expert_ffn,
+#   kv_lora, rope_dim, inner (ssm d_inner), state, conv, groups, sites, audio_ctx
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # convention: last dim is the output dim for 2D+; fan-in is the product of the
+    # remaining non-layer dims.  For stacked (L, ..., out) weights the leading
+    # layer dim is excluded by the caller via scale.
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return max(int(jnp.prod(jnp.array(shape[:-1]))), 1)
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialize a params pytree from specs (CPU smoke / examples only)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    rngs = jax.random.split(rng, len(leaves))
+
+    def one(spec: ParamSpec, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(_fan_in(spec.shape))
+        if spec.init == "embed":
+            std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, rngs)])
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree (no sharding — attached later by the resolver)."""
+    return spec_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def logical_axes(specs):
+    return spec_map(lambda s: s.axes, specs)
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers (compute in bf16, normalize/softmax in f32)
+# ---------------------------------------------------------------------------
+
+def cast_compute(x, dtype=jnp.bfloat16):
+    return x.astype(dtype)
+
+
+def rms_norm(x, weight, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_specs(cfg, d: int) -> dict:
+    if cfg.norm == "layer":
+        return {"scale": ParamSpec((d,), ("embed",), "ones"),
+                "bias": ParamSpec((d,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def apply_norm(cfg, p: dict, x):
+    if cfg.norm == "layer":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def mlp_specs(cfg, d: int, d_ff: int, prefix_axes=()) -> dict:
+    pa = tuple(prefix_axes)
+    pd = tuple([0] * len(pa))  # placeholder, shapes get layer dim prepended by stack
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_down": ParamSpec((d_ff, d), ("ffn", "embed")),
+        }
+    return {
+        "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+        "w_down": ParamSpec((d_ff, d), ("ffn", "embed")),
+    }
+
+
+def apply_mlp(cfg, p: dict, x):
+    xc = cast_compute(x)
+    if cfg.mlp == "swiglu":
+        g = xc @ cast_compute(p["w_gate"])
+        u = xc @ cast_compute(p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xc.dtype) * u
+    else:
+        u = xc @ cast_compute(p["w_up"])
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(xc.dtype)
+    return (h @ cast_compute(p["w_down"])).astype(x.dtype)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked layer dim to every spec in the tree (for lax.scan)."""
+    def one(s: ParamSpec) -> ParamSpec:
+        scale = s.scale if s.scale is not None else 1.0 / math.sqrt(_fan_in(s.shape))
+        if s.init in ("zeros", "ones"):
+            scale = None
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, scale, s.dtype)
+    return spec_map(one, specs)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy (never materializes (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+def vocab_padded(cfg) -> int:
+    """Vocab padded to a 256 multiple so the vocab axis always shards over the
+    16-way model axis (production frameworks pad; e.g. granite's 49155 would
+    otherwise replicate the logit tensor on every device).  Padded logit
+    columns are masked to -1e30 before any softmax/argmax."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def embed_specs(cfg) -> dict:
+    vp = vocab_padded(cfg)
+    out = {"embedding": ParamSpec((vp, cfg.d_model), ("vocab", "embed"), "embed")}
+    if not cfg.tied_embeddings:
+        out["lm_head"] = ParamSpec((cfg.d_model, vp), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p: dict, tokens):
+    emb = p["embedding"]
+    return cast_compute(jnp.take(emb, tokens, axis=0))
+
+
+def lm_logits(cfg, p: dict, h):
+    """(..., D) -> (..., V_padded) f32 logits; padded columns masked."""
+    hc = cast_compute(h)
+    if cfg.tied_embeddings:
+        w = cast_compute(p["embedding"]).T
+    else:
+        w = cast_compute(p["lm_head"])
+    logits = (hc @ w).astype(jnp.float32)
+    if cfg.logit_scale != 1.0:
+        logits = logits / cfg.logit_scale
+    vp = w.shape[-1]
+    if vp != cfg.vocab_size:
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def chunked_softmax_xent(cfg, p: dict, h, labels, chunk: int = 512,
+                         unroll: bool = False):
+    """Mean token cross-entropy, scanning over sequence chunks.
+
+    h: (B, S, D); labels: (B, S) int32.  Avoids a (B, S, V) f32 resident tensor —
+    at assigned scale that tensor is hundreds of GB/device.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    @jax.checkpoint  # recompute the (B, c, V) logits in the backward pass
+    def piece(h_c, y_c):
+        logits = lm_logits(cfg, p, h_c)                      # (B, c, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)              # (B, c)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(acc, xs):
+        h_c, y_c = xs
+        return acc + piece(h_c, y_c), None
+
+    hs = h[:, :n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+    ys = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys),
+                            unroll=unroll)
+    if rem:
+        total = total + piece(h[:, n * chunk:], labels[:, n * chunk:])
+    return total / (B * S)

@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder.
+
+The audio frontend (conv1d stack + log-mel) is a STUB per the assignment:
+``input_specs()`` supplies precomputed frame embeddings (B, n_audio_ctx, d_model).
+Positions are sinusoidal (Whisper's learned decoder table tops out at 448 tokens;
+the assigned shapes need 32k — deviation recorded in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ParamSpec, apply_mlp, apply_norm, cast_compute,
+                                 chunked_softmax_xent, embed_specs, embed_tokens,
+                                 lm_logits, mlp_specs, norm_specs, stack_specs)
+from repro.models.variant import BASELINE, Variant, remat_wrap
+
+
+def sinusoid(S: int, D: int, offset=0):
+    pos = jnp.arange(S)[:, None] + offset
+    dim = jnp.arange(0, D, 2)[None, :]
+    ang = pos / jnp.power(10000.0, dim / D)
+    emb = jnp.zeros((S, D), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(ang))
+    emb = emb.at[:, 1::2].set(jnp.cos(ang[:, : (D + 1) // 2]))
+    return emb
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- parameters ----------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        enc_block = {
+            "ln1": norm_specs(cfg, cfg.d_model),
+            "attn": attn.gqa_specs(cfg, cfg.d_model),
+            "ln2": norm_specs(cfg, cfg.d_model),
+            "mlp": mlp_specs(cfg, cfg.d_model, cfg.d_ff),
+        }
+        dec_block = {
+            "ln1": norm_specs(cfg, cfg.d_model),
+            "self_attn": attn.gqa_specs(cfg, cfg.d_model),
+            "ln_x": norm_specs(cfg, cfg.d_model),
+            "cross_attn": attn.gqa_specs(cfg, cfg.d_model),
+            "ln2": norm_specs(cfg, cfg.d_model),
+            "mlp": mlp_specs(cfg, cfg.d_model, cfg.d_ff),
+        }
+        return {
+            "embed": embed_specs(cfg),
+            "enc_blocks": stack_specs(enc_block, cfg.n_encoder_layers),
+            "enc_ln_f": norm_specs(cfg, cfg.d_model),
+            "dec_blocks": stack_specs(dec_block, cfg.n_layers),
+            "ln_f": norm_specs(cfg, cfg.d_model),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames, ctx, variant: Variant = BASELINE):
+        """frames: (B, A, D) precomputed frame embeddings (frontend stub)."""
+        cfg = self.cfg
+        B, A, D = frames.shape
+        x = cast_compute(frames) + sinusoid(A, D)[None].astype(jnp.bfloat16)
+        x = ctx.constrain(x, "batch", "act_seq", None)
+
+        def body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, p["ln1"], x)
+            a = attn.gqa_attention(cfg, p["attn"], h, causal=False,
+                                   kv_block=variant.kv_block, ctx=ctx,
+                                   unroll=variant.unroll)
+            x = x + a
+            h = apply_norm(cfg, p["ln2"], x)
+            return x + apply_mlp(cfg, p["mlp"], h), None
+
+        x, _ = jax.lax.scan(remat_wrap(body, variant), x, params["enc_blocks"])
+        return apply_norm(cfg, params["enc_ln_f"], x)
+
+    # -- decoder (teacher-forced train) ----------------------------------------
+    def _dec_block(self, p, x, enc_out, ctx, variant, positions):
+        cfg = self.cfg
+        h = apply_norm(cfg, p["ln1"], x)
+        a = attn.gqa_attention(cfg, p["self_attn"], h, causal=True,
+                               positions=positions, kv_block=variant.kv_block,
+                               variant=variant.attn_variant, ctx=ctx,
+                               unroll=variant.unroll)
+        x = x + a
+        h = apply_norm(cfg, p["ln_x"], x)
+        # cross attention: q from decoder, k/v from encoder output
+        inv = None  # whisper: no RoPE
+        q, _, _ = attn.gqa_project_qkv(cfg, p["cross_attn"], h,
+                                       positions, inv)
+        k = jnp.einsum("bad,dhk->bahk", cast_compute(enc_out),
+                       cast_compute(p["cross_attn"]["wk"]))
+        v = jnp.einsum("bad,dhk->bahk", cast_compute(enc_out),
+                       cast_compute(p["cross_attn"]["wv"]))
+        o = attn.chunked_attention(q, k, v, causal=False,
+                                   kv_block=min(variant.kv_block, k.shape[1]),
+                                   ctx=ctx, unroll=variant.unroll)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           cast_compute(p["cross_attn"]["wo"])).astype(x.dtype)
+        h = apply_norm(cfg, p["ln2"], x)
+        return x + apply_mlp(cfg, p["mlp"], h)
+
+    def hidden_states(self, params, tokens, enc_out, ctx,
+                      variant: Variant = BASELINE):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        x = x + sinusoid(S, cfg.d_model)[None].astype(x.dtype)
+        positions = jnp.arange(S)
+
+        def body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            return self._dec_block(p, x, enc_out, ctx, variant, positions), None
+
+        x, _ = jax.lax.scan(remat_wrap(body, variant), x, params["dec_blocks"])
+        return apply_norm(cfg, params["ln_f"], x)
+
+    def loss(self, params, batch, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], ctx, variant)
+        h = self.hidden_states(params, batch["tokens"], enc_out, ctx, variant)
+        xent = chunked_softmax_xent(cfg, params["embed"], h, batch["labels"],
+                                    chunk=variant.xent_chunk,
+                                    unroll=variant.unroll)
+        return xent, {"xent": xent}
+
+    # -- serving -----------------------------------------------------------------
+    def cache_shapes(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        A = cfg.n_audio_ctx
+        kv = cfg.n_kv_heads
+        return {
+            "k": ((batch, seq_len, kv, hd), ("batch", "kv_seq", "kv_heads", None),
+                  jnp.bfloat16),
+            "v": ((batch, seq_len, kv, hd), ("batch", "kv_seq", "kv_heads", None),
+                  jnp.bfloat16),
+            "xk": ((batch, A, kv, hd), ("batch", None, "kv_heads", None),
+                   jnp.bfloat16),
+            "xv": ((batch, A, kv, hd), ("batch", None, "kv_heads", None),
+                   jnp.bfloat16),
+        }
+
+    def prefill(self, params, batch, ctx, variant: Variant = BASELINE):
+        """Encode + teacher-forced decoder pass emitting self+cross caches."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = self.encode(params, batch["frames"], ctx, variant)
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        x = x + sinusoid(S, cfg.d_model)[None].astype(x.dtype)
+        positions = jnp.arange(S)
+
+        def body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, p["ln1"], x)
+            q, k, v = attn.gqa_project_qkv(cfg, p["self_attn"], h, positions, None)
+            o = attn.chunked_attention(q, k, v, causal=True,
+                                       kv_block=min(variant.kv_block, S), ctx=ctx)
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               cast_compute(p["self_attn"]["wo"])).astype(x.dtype)
+            h = apply_norm(cfg, p["ln_x"], x)
+            qx, _, _ = attn.gqa_project_qkv(cfg, p["cross_attn"], h, positions, None)
+            xk = jnp.einsum("bad,dhk->bahk", cast_compute(enc_out),
+                            cast_compute(p["cross_attn"]["wk"]))
+            xv = jnp.einsum("bad,dhk->bahk", cast_compute(enc_out),
+                            cast_compute(p["cross_attn"]["wv"]))
+            o = attn.chunked_attention(qx, xk, xv, causal=False,
+                                       kv_block=min(variant.kv_block, xk.shape[1]),
+                                       ctx=ctx)
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               cast_compute(p["cross_attn"]["wo"])).astype(x.dtype)
+            h = apply_norm(cfg, p["ln2"], x)
+            x = x + apply_mlp(cfg, p["mlp"], h)
+            entry = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+                     "xk": xk.astype(jnp.bfloat16), "xv": xv.astype(jnp.bfloat16)}
+            return x, entry
+
+        x, cache = jax.lax.scan(remat_wrap(body, variant), x, params["dec_blocks"])
+        x = apply_norm(cfg, params["ln_f"], x[:, -1:, :])
+        return lm_logits(cfg, params["embed"], x)[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, pos, ctx,
+                    variant: Variant = BASELINE):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_tokens(params["embed"], tokens)
+        x = x + sinusoid(1, cfg.d_model, offset=pos)[None].astype(x.dtype)
+
+        def body(x, xs):
+            p, layer_cache = xs
+            h = apply_norm(cfg, p["ln1"], x)
+            a, ck, cv = attn.gqa_decode(cfg, p["self_attn"], h,
+                                        layer_cache["k"], layer_cache["v"], pos)
+            x = x + a
+            h = apply_norm(cfg, p["ln_x"], x)
+            positions = jnp.full((B, 1), pos, jnp.int32)
+            q, _, _ = attn.gqa_project_qkv(cfg, p["cross_attn"], h, positions, None)
+            o = attn.chunked_attention(q, layer_cache["xk"], layer_cache["xv"],
+                                       causal=False,
+                                       kv_block=min(1024, layer_cache["xk"].shape[1]))
+            x = x + jnp.einsum("bshk,hkd->bsd", o,
+                               cast_compute(p["cross_attn"]["wo"])).astype(x.dtype)
+            h = apply_norm(cfg, p["ln2"], x)
+            x = x + apply_mlp(cfg, p["mlp"], h)
+            entry = {"k": ck, "v": cv,
+                     "xk": layer_cache["xk"], "xv": layer_cache["xv"]}
+            return x, entry
+
+        x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+        x = apply_norm(cfg, params["ln_f"], x)
+        return lm_logits(cfg, params["embed"], x), new_cache

@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* transformer block.
+
+The shared block (GQA attention + FFN, one parameter set) is applied before every
+``attn_every``-th group of Mamba layers with a per-site input norm; the 54 Mamba
+layers scan in groups of ``attn_every`` so the shared-block applications stay
+O(sites) in the HLO while the Mamba stack stays scanned.  Zamba2's per-site LoRA
+deltas are omitted (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (apply_mlp, apply_norm, chunked_softmax_xent,
+                                 embed_specs, embed_tokens, lm_logits, mlp_specs,
+                                 norm_specs, stack_specs)
+from repro.models.ssm import (ssm_block, ssm_cache_shapes, ssm_decode, ssm_specs)
+from repro.models.variant import BASELINE, Variant, remat_wrap
+
+
+class HybridLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.n_sites = cfg.n_layers // cfg.attn_every
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        mamba_block = {"ln": norm_specs(cfg, cfg.d_model), "ssm": ssm_specs(cfg)}
+        shared_block = {
+            "ln1": norm_specs(cfg, cfg.d_model),
+            "attn": attn.gqa_specs(cfg, cfg.d_model),
+            "ln2": norm_specs(cfg, cfg.d_model),
+            "mlp": mlp_specs(cfg, cfg.d_model, cfg.d_ff),
+        }
+        return {
+            "embed": embed_specs(cfg),
+            # (sites, group, ...) double-stacked mamba params
+            "mamba": stack_specs(
+                stack_specs(mamba_block, cfg.attn_every, "layers"),
+                self.n_sites, "sites"),
+            "site_norms": stack_specs(norm_specs(cfg, cfg.d_model),
+                                      self.n_sites, "sites"),
+            "shared": shared_block,
+            "ln_f": norm_specs(cfg, cfg.d_model),
+        }
+
+    # -- shared attention block ------------------------------------------------
+    def _shared_block(self, params, site_norm, x, ctx, variant, positions):
+        cfg = self.cfg
+        p = params["shared"]
+        h = apply_norm(cfg, site_norm, x)      # per-site input norm
+        h1 = apply_norm(cfg, p["ln1"], h)
+        a = attn.gqa_attention(cfg, p["attn"], h1, causal=True,
+                               positions=positions, kv_block=variant.kv_block,
+                               variant=variant.attn_variant, ctx=ctx,
+                               unroll=variant.unroll)
+        h = h + a
+        h2 = apply_norm(cfg, p["ln2"], h)
+        return x + h + apply_mlp(cfg, p["mlp"], h2)  # residual onto the backbone
+
+    def hidden_states(self, params, tokens, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        x = ctx.constrain(x, "batch", "act_seq", None)
+        positions = jnp.arange(S)
+
+        def mamba_body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, p["ln"], x)
+            return x + ssm_block(cfg, p["ssm"], h, ctx), None
+
+        # nested remat: the inner 6-layer scan must checkpoint its own body, or
+        # the site-level recompute stacks every layer's SSD score matrices x6
+        mamba_fn = remat_wrap(mamba_body, variant)
+
+        def site_body(x, xs):
+            group_p, site_norm = xs
+            x = self._shared_block(params, site_norm, x, ctx, variant, positions)
+            x, _ = jax.lax.scan(mamba_fn, x, group_p)
+            return x, None
+
+        x, _ = jax.lax.scan(remat_wrap(site_body, variant), x,
+                            (params["mamba"], params["site_norms"]))
+        return apply_norm(cfg, params["ln_f"], x)
+
+    def loss(self, params, batch, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        h = self.hidden_states(params, batch["tokens"], ctx, variant)
+        xent = chunked_softmax_xent(cfg, params["embed"], h, batch["labels"],
+                                    chunk=variant.xent_chunk,
+                                    unroll=variant.unroll)
+        return xent, {"xent": xent}
+
+    # -- serving -----------------------------------------------------------------
+    def cache_shapes(self, batch: int, seq_len: int) -> dict:
+        """Two cache families: per-mamba-layer SSM caches and per-site KV caches."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        ssm = ssm_cache_shapes(cfg, batch)
+        return {
+            "ssm": ssm,  # stacked (sites, group, ...) by the registry
+            "k": ((batch, seq_len, cfg.n_kv_heads, hd),
+                  ("batch", "kv_seq", "kv_heads", None), jnp.bfloat16),
+            "v": ((batch, seq_len, cfg.n_kv_heads, hd),
+                  ("batch", "kv_seq", "kv_heads", None), jnp.bfloat16),
+        }
+
+    def prefill(self, params, tokens, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        positions = jnp.arange(S)
+
+        def mamba_body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, p["ln"], x)
+            # prefill needs the final SSM state: recompute block exposing it
+            from repro.models.ssm import _project, ssd_chunked, ssm_dims
+            from repro.models.common import cast_compute, rms_norm
+            z, xh, Bm, Cm, dt = _project(cfg, p["ssm"], h)
+            A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+            y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk_size)
+            y = y + p["ssm"]["D"].astype(jnp.float32)[None, None, :, None] * \
+                xh.astype(jnp.float32)
+            d_in, H = ssm_dims(cfg)
+            y = y.reshape(B, S, d_in)
+            y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+            y = rms_norm(y.astype(x.dtype), p["ssm"]["gate_norm"], cfg.norm_eps)
+            out = x + (cast_compute(y) @ cast_compute(p["ssm"]["w_out"])).astype(x.dtype)
+            W = cfg.ssm.conv_width
+            # conv caches: last W-1 *pre-activation* conv inputs
+            xc = cast_compute(h)
+            entry = {
+                "state": state,
+                "conv_x": (xc @ cast_compute(p["ssm"]["w_x"]))[:, S - (W - 1):, :],
+                "conv_B": (xc @ cast_compute(p["ssm"]["w_B"]))[:, S - (W - 1):, :],
+                "conv_C": (xc @ cast_compute(p["ssm"]["w_C"]))[:, S - (W - 1):, :],
+            }
+            return out, entry
+
+        def site_body(x, xs):
+            group_p, site_norm = xs
+            h = apply_norm(cfg, site_norm, x)
+            h1 = apply_norm(cfg, params["shared"]["ln1"], h)
+            q, k, v = attn.gqa_project_qkv(
+                cfg, params["shared"]["attn"], h1, positions,
+                attn.rope_freqs(cfg.resolved_head_dim, cfg.rope_pct, cfg.rope_theta))
+            o = attn.chunked_attention(q, k, v, causal=True,
+                                       kv_block=min(variant.kv_block, S), ctx=ctx)
+            from repro.models.common import cast_compute
+            h = h + jnp.einsum("bshk,hkd->bsd", o,
+                               cast_compute(params["shared"]["attn"]["wo"])).astype(x.dtype)
+            h2 = apply_norm(cfg, params["shared"]["ln2"], h)
+            x = x + h + apply_mlp(cfg, params["shared"]["mlp"], h2)
+            x, ssm_cache = jax.lax.scan(remat_wrap(mamba_body, variant), x, group_p)
+            entry = {"ssm": ssm_cache,
+                     "k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+            return x, entry
+
+        x, cache = jax.lax.scan(site_body, x,
+                                (params["mamba"], params["site_norms"]))
+        x = apply_norm(cfg, params["ln_f"], x[:, -1:, :])
+        return lm_logits(cfg, params["embed"], x)[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, pos, ctx,
+                    variant: Variant = BASELINE, seq_shard_decode: bool = False):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens)
+
+        def mamba_body(x, xs):
+            p, layer_cache = xs
+            h = apply_norm(cfg, p["ln"], x)
+            y, new_cache = ssm_decode(cfg, p["ssm"], h, layer_cache)
+            return x + y, new_cache
+
+        def site_body(x, xs):
+            group_p, site_norm, layer_cache = xs
+            h = apply_norm(cfg, site_norm, x)
+            h1 = apply_norm(cfg, params["shared"]["ln1"], h)
+            if seq_shard_decode:
+                from repro.serve.flash_decode import seq_sharded_gqa_decode
+                a, ck, cv = seq_sharded_gqa_decode(
+                    ctx, cfg, params["shared"]["attn"], h1,
+                    layer_cache["k"], layer_cache["v"], pos)
+            else:
+                a, ck, cv = attn.gqa_decode(cfg, params["shared"]["attn"], h1,
+                                            layer_cache["k"], layer_cache["v"], pos)
+            h = h + a
+            h2 = apply_norm(cfg, params["shared"]["ln2"], h)
+            x = x + h + apply_mlp(cfg, params["shared"]["mlp"], h2)
+            x, new_ssm = jax.lax.scan(mamba_body, x,
+                                      (group_p, layer_cache["ssm"]))
+            return x, {"ssm": new_ssm, "k": ck, "v": cv}
+
+        x, new_cache = jax.lax.scan(
+            site_body, x, (params["mamba"], params["site_norms"], cache))
+        x = apply_norm(cfg, params["ln_f"], x)
+        return lm_logits(cfg, params["embed"], x), new_cache

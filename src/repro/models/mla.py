@@ -1,0 +1,103 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Train/prefill use the expanded form (latent -> per-head K/V, flash-chunked).
+Decode uses *weight absorption*: queries are projected into the 512-dim latent
+space and attention runs directly against the compressed cache — the cache holds
+only (kv_lora + rope_dim) per token, which is the whole point of MLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (apply_rope, chunked_attention,
+                                    folded_causal_attention, rope_freqs)
+from repro.models.common import ParamSpec, cast_compute, rms_norm
+
+
+def mla_specs(cfg) -> dict:
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qdim = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq": ParamSpec((d, H, qdim), ("embed", "heads", "head_dim")),
+        "w_dkv": ParamSpec((d, m.kv_lora_rank + m.rope_head_dim), ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), ("kv_lora",), "ones"),
+        "w_uk": ParamSpec((m.kv_lora_rank, H, m.nope_head_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((m.kv_lora_rank, H, m.v_head_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _project_latent(cfg, p, x, positions, inv_freq):
+    """Returns (q_nope, q_rope, c_kv(normalized), k_rope) for a token block."""
+    m = cfg.mla
+    xc = cast_compute(x)
+    q = jnp.einsum("bsd,dhk->bshk", xc, cast_compute(p["wq"]))
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, inv_freq)
+    ckv = jnp.einsum("bsd,dr->bsr", xc, cast_compute(p["w_dkv"]))
+    c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, inv_freq)[:, :, 0, :]
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_attention(cfg, p: dict, x, *, positions=None, kv_block: int = 1024,
+                  variant: str = "masked", ctx=None, unroll: bool = False):
+    """Expanded-form causal MLA for train/prefill.  x: (B, S, D)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    inv_freq = rope_freqs(m.rope_head_dim, 1.0, cfg.rope_theta)
+    q_nope, q_rope, c, k_rope = _project_latent(cfg, p, x, positions, inv_freq)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, cast_compute(p["w_uk"]))
+    v = jnp.einsum("bsr,rhk->bshk", c, cast_compute(p["w_uv"]))
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    if variant == "folded" and S > kv_block and S % kv_block == 0:
+        o = folded_causal_attention(q, k, v, q_block=kv_block, kv_block=kv_block,
+                                    ctx=ctx, unroll=unroll)
+    else:
+        o = chunked_attention(q, k, v, causal=True, kv_block=min(kv_block, S),
+                              ctx=ctx, unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", o, cast_compute(p["wo"])).astype(x.dtype)
+
+
+def mla_decode(cfg, p: dict, x, cache_c, cache_kr, pos):
+    """Absorbed-form decode against the compressed cache.
+
+    x: (B, 1, D); cache_c: (B, Smax, R); cache_kr: (B, Smax, rope_dim).
+    scores = q_nope @ W_uk . c_j  (absorb W_uk into q)  +  q_rope . k_rope_j
+    out    = (attn @ c) @ W_uv @ W_o  (absorb W_uv into the output path)
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    inv_freq = rope_freqs(m.rope_head_dim, 1.0, cfg.rope_theta)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _project_latent(cfg, p, x, positions, inv_freq)
+    cache_c = jax.lax.dynamic_update_slice(cache_c, c_new.astype(cache_c.dtype),
+                                           (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, kr_new.astype(cache_kr.dtype),
+                                            (0, pos, 0))
+    # absorb W_uk: q_lat (B, H, R)
+    q_lat = jnp.einsum("bshk,rhk->bhr", q_nope, cast_compute(p["w_uk"]))
+    s = jnp.einsum("bhr,bjr->bhj", q_lat, cast_compute(cache_c),
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bshk,bjk->bhj", q_rope, cast_compute(cache_kr),
+                       preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(m.nope_head_dim + m.rope_head_dim))
+    Smax = cache_c.shape[1]
+    mask = jnp.arange(Smax)[None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhj,bjr->bhr", w.astype(jnp.bfloat16),
+                       cast_compute(cache_c), preferred_element_type=jnp.float32)
+    # absorb W_uv then W_o
+    o = jnp.einsum("bhr,rhk->bhk", o_lat.astype(jnp.bfloat16), cast_compute(p["w_uv"]))
+    out = jnp.einsum("bhk,hkd->bd", o, cast_compute(p["wo"]))[:, None, :]
+    return out.astype(x.dtype), cache_c, cache_kr

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layer: shard_map expert parallelism.
+
+Design (DESIGN.md §5): experts shard over the ``model`` axis (EP); tokens shard
+over the data axes.  Routing is computed redundantly on every EP peer (cheap:
+T x D x E), each peer processes only its local experts under a fixed per-expert
+capacity, and one psum over ``model`` combines routed output, shared-expert
+output and (arctic) the dense-residual branch.  Expert weights are ZeRO-3
+sharded over the data axes and all-gathered (in bf16) inside the body.
+
+This avoids all-to-all dispatch in the baseline; an a2a variant is a recorded
+hillclimb candidate (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec, cast_compute
+
+
+def moe_specs(cfg) -> dict:
+    m, d = cfg.moe, cfg.d_model
+    E, F = m.n_experts, m.d_ff_expert
+    out = {
+        "router": ParamSpec((d, E), ("embed", None), "normal", 0.02),
+        "w_gate": ParamSpec((E, d, F), ("experts", "embed", None)),
+        "w_up": ParamSpec((E, d, F), ("experts", "embed", None)),
+        "w_down": ParamSpec((E, F, d), ("experts", None, "embed")),
+    }
+    if m.n_shared_experts:
+        Fs = F * m.n_shared_experts
+        out["shared_gate"] = ParamSpec((d, Fs), ("embed", "ffn"))
+        out["shared_up"] = ParamSpec((d, Fs), ("embed", "ffn"))
+        out["shared_down"] = ParamSpec((Fs, d), ("ffn", "embed"))
+    if m.dense_residual:
+        out["res_gate"] = ParamSpec((d, cfg.d_ff), ("embed", "ffn"))
+        out["res_up"] = ParamSpec((d, cfg.d_ff), ("embed", "ffn"))
+        out["res_down"] = ParamSpec((cfg.d_ff, d), ("ffn", "embed"))
+    return out
+
+
+def _ffn_partial(x, wg, wu, wd):
+    """SwiGLU on a weight shard; output is a partial sum (psum later)."""
+    g = x @ wg
+    u = x @ wu
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    return h @ wd
+
+
+def moe_layer(ctx, cfg, p: dict, x, *, capacity_factor=None,
+              psum_dtype: str = "float32"):
+    """x: (B, S, D) sharded P(dp, None, None).  Returns (y, aux_loss)."""
+    m = cfg.moe
+    mesh = ctx.mesh
+    tp = ctx.tp_axis or "model"
+    dp = ctx.dp_axes
+    fsdp = ctx.fsdp_axes
+    ep_size = mesh.shape[tp] if tp in mesh.axis_names else 1
+    E, K, F, D = m.n_experts, m.top_k, m.d_ff_expert, cfg.d_model
+    assert E % ep_size == 0, (E, ep_size)
+    E_local = E // ep_size
+
+    B, S, _ = x.shape
+    dp_size = ctx.axis_size(*dp) if dp else 1
+    assert B % dp_size == 0, (B, dp_size)
+    T = (B // dp_size) * S
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    C = max(1, math.ceil(T * K / E * cf))
+
+    fsdp_tuple = tuple(fsdp)
+    gather_ok = bool(fsdp_tuple) and ctx.axis_size(*fsdp_tuple) > 1
+
+    def body(xb, router_w, wg, wu, wd, *rest):
+        rest = list(rest)
+        Bl, Sl, _ = xb.shape
+        xf = cast_compute(xb.reshape(Bl * Sl, D))
+
+        # ZeRO-3: gather expert shards over the data axes (bf16 to halve traffic)
+        def gather(w, axis):
+            wc = cast_compute(w)
+            if gather_ok:
+                wc = jax.lax.all_gather(wc, fsdp_tuple, axis=axis, tiled=True)
+            return wc
+        wg_f = gather(wg, 1)          # (E_local, D, F)   — D is the fsdp shard
+        wu_f = gather(wu, 1)
+        wd_f = gather(wd, 2)          # (E_local, F, D)   — D is the fsdp shard
+
+        # --- routing (replicated across EP peers) ---
+        logits = (xf @ cast_compute(router_w)).astype(jnp.float32)   # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, K)                          # (T, K)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+        # --- capacity dispatch to local experts ---
+        # Slot bookkeeping runs on narrow (T*K, E_local) int tensors; the D-wide
+        # gathers/scatters loop over the K choices so no (T*K, D) tensor is ever
+        # materialized (K x token activation memory otherwise).
+        e0 = jax.lax.axis_index(tp) * E_local if tp in mesh.axis_names else 0
+        flat_e = topi.reshape(-1)                                     # (T*K,)
+        le = flat_e - e0
+        local = (le >= 0) & (le < E_local)
+        onehot = (le[:, None] == jnp.arange(E_local)[None, :]) & local[:, None]
+        pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) * onehot   # 1-based
+        keep = onehot & (pos <= C)
+        slot_mat = jnp.where(keep, le[:, None] * C + pos - 1, 0)
+        kept = jnp.any(keep, axis=1)
+        flat_slot = jnp.where(kept, jnp.sum(slot_mat, axis=1), E_local * C)
+        slot_tk = flat_slot.reshape(T, K)
+        kept_tk = kept.reshape(T, K)
+
+        buf = jnp.zeros((E_local * C + 1, D), xf.dtype)
+        for kk in range(K):   # K static scatters of (T, D) — no T*K blowup
+            buf = buf.at[slot_tk[:, kk]].set(xf, mode="drop")
+        xe = buf[:E_local * C].reshape(E_local, C, D)
+
+        # --- expert FFN (batched over local experts) ---
+        g = jnp.einsum("ecd,edf->ecf", xe, wg_f)
+        u = jnp.einsum("ecd,edf->ecf", xe, wu_f)
+        h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(xe.dtype)
+        ye = jnp.einsum("ecf,efd->ecd", h, wd_f).reshape(E_local * C, D)
+        ye = jnp.concatenate([ye, jnp.zeros((1, D), ye.dtype)], axis=0)
+
+        # --- combine (K gathers of (T, D), f32 accumulation) ---
+        out = jnp.zeros((T, D), jnp.float32)
+        for kk in range(K):
+            w_k = (topv[:, kk] * kept_tk[:, kk]).astype(jnp.float32)
+            out = out + ye[slot_tk[:, kk]].astype(jnp.float32) * w_k[:, None]
+
+        # --- shared experts / dense residual: TP partials on the ffn shard ---
+        idx = 0
+        if m.n_shared_experts:
+            sg, su, sd = rest[idx], rest[idx + 1], rest[idx + 2]
+            idx += 3
+            out = out + _ffn_partial(xf, gather(sg, 0), gather(su, 0),
+                                     gather(sd, 1)).astype(jnp.float32)
+        if m.dense_residual:
+            rg, ru, rd = rest[idx], rest[idx + 1], rest[idx + 2]
+            idx += 3
+            out = out + _ffn_partial(xf, gather(rg, 0), gather(ru, 0),
+                                     gather(rd, 1)).astype(jnp.float32)
+
+        if tp in mesh.axis_names and mesh.shape[tp] > 1:
+            out = jax.lax.psum(out.astype(jnp.dtype(psum_dtype)), tp)
+
+        # --- load-balance aux (Switch-style), averaged over the whole mesh ---
+        frac = jnp.mean(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=(0, 1)) * E
+        pmean = jnp.mean(probs, axis=0)
+        aux = jnp.sum(frac * pmean)
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return out.reshape(Bl, Sl, D).astype(xb.dtype), aux
+
+    # ---- shard_map plumbing ----
+    dp_spec = tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+    x_spec = P(dp_spec, None, None)
+    fs = fsdp_tuple if len(fsdp_tuple) > 1 else (fsdp_tuple[0] if fsdp_tuple else None)
+    tp_s = tp if tp in mesh.axis_names else None
+
+    in_specs = [x_spec, P(None, None),
+                P(tp_s, fs, None), P(tp_s, fs, None), P(tp_s, None, fs)]
+    args = [x, p["router"], p["w_gate"], p["w_up"], p["w_down"]]
+    # shared/residual: (D, F) sharded (fsdp, model); (F, D) sharded (model, fsdp)
+    for names in (("shared_gate", "shared_up", "shared_down"),
+                  ("res_gate", "res_up", "res_down")):
+        if names[0] in p:
+            in_specs += [P(fs, tp_s), P(fs, tp_s), P(tp_s, fs)]
+            args += [p[names[0]], p[names[1]], p[names[2]]]
+
+    shard_fn = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                             out_specs=(x_spec, P()), check_vma=False)
+    return shard_fn(*args)

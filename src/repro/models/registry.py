@@ -1,0 +1,116 @@
+"""Model registry: one interface over all assigned families.
+
+``build(cfg)`` returns a model object exposing:
+    param_specs() -> ParamSpec pytree
+    loss(params, batch, ctx, variant) -> (scalar, metrics)
+    prefill(params, <tokens|batch>, ctx, variant) -> (logits, cache)
+    decode_step(params, cache, tokens, pos, ctx, variant) -> (logits, cache)
+
+This module adds the pieces shared by launch/tests: abstract input specs per
+assigned shape, stacked cache specs with logical axes, and batch construction.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.ssm_lm import SSMLM
+from repro.models.transformer import DecoderLM
+
+
+def build(cfg: ArchConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return SSMLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins — no allocation; dry-run pattern)
+# ---------------------------------------------------------------------------
+
+def input_abstract(cfg: ArchConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """Returns (abstract batch dict, logical-axes dict) for the step function."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    ax = ("batch", "seq")
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        axes = {"tokens": ax, "labels": ax}
+    elif shape.kind == "prefill":
+        batch = {"tokens": tok}
+        axes = {"tokens": ax}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        axes = {"tokens": ("batch", None)}
+    if cfg.family == "encdec":
+        frames = jax.ShapeDtypeStruct((B, cfg.n_audio_ctx, cfg.d_model),
+                                      jnp.bfloat16)
+        if shape.kind in ("train", "prefill"):
+            batch["frames"] = frames
+            axes["frames"] = ("batch", None, None)
+    return batch, axes
+
+
+def make_batch(cfg: ArchConfig, shape_or_bs, rng: jax.Array):
+    """Concrete random batch (smoke tests / examples)."""
+    if isinstance(shape_or_bs, tuple):
+        B, S = shape_or_bs
+    else:
+        B, S = shape_or_bs.global_batch, shape_or_bs.seq_len
+    r1, r2 = jax.random.split(rng)
+    tokens = jax.random.randint(r1, (B, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens,
+             "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            r2, (B, cfg.n_audio_ctx, cfg.d_model), jnp.bfloat16) * 0.02
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (stacked over layers/sites) with logical axes
+# ---------------------------------------------------------------------------
+
+def cache_abstract(cfg: ArchConfig, batch: int, seq_len: int) -> tuple[dict, dict]:
+    """(abstract cache pytree, logical-axes pytree), stacked per family."""
+    model = build(cfg)
+    shapes = model.cache_shapes(batch, seq_len)
+
+    def entry(spec, lead):
+        shp, axes, dtype = spec
+        return (jax.ShapeDtypeStruct(lead + shp, dtype),
+                (None,) * len(lead) + axes)
+
+    if cfg.family == "hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        group = cfg.attn_every
+        abs_t: dict = {"ssm": {}}
+        ax_t: dict = {"ssm": {}}
+        for k, spec in shapes["ssm"].items():
+            abs_t["ssm"][k], ax_t["ssm"][k] = entry(spec, (n_sites, group))
+        for k in ("k", "v"):
+            abs_t[k], ax_t[k] = entry(shapes[k], (n_sites,))
+        return abs_t, ax_t
+
+    lead = (cfg.n_layers,)
+    abs_t, ax_t = {}, {}
+    for k, spec in shapes.items():
+        abs_t[k], ax_t[k] = entry(spec, lead)
+    return abs_t, ax_t
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    """Concrete zero-filled cache (smoke tests / serving examples)."""
+    abs_t, _ = cache_abstract(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abs_t)

@@ -1,0 +1,218 @@
+"""Mamba2 SSD (state-space duality) block: chunked train/prefill + O(1) decode.
+
+Chunked SSD follows Dao & Gu 2024 (ssd_minimal_discrete): intra-chunk quadratic
+(MXU-friendly), inter-chunk linear recurrence via lax.scan over chunk states.
+Projections are split per-stream (z/x/B/C/dt) instead of one packed matrix so that
+tensor-parallel sharding (inner -> model axis) never crosses stream boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, cast_compute, rms_norm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads
+
+
+def ssm_specs(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H = ssm_dims(cfg)
+    GN = s.n_groups * s.d_state
+    return {
+        "w_z": ParamSpec((d, d_in), ("embed", "inner")),
+        "w_x": ParamSpec((d, d_in), ("embed", "inner")),
+        "w_B": ParamSpec((d, GN), ("embed", "state")),
+        "w_C": ParamSpec((d, GN), ("embed", "state")),
+        "w_dt": ParamSpec((d, H), ("embed", "heads")),
+        "conv_x": ParamSpec((s.conv_width, d_in), ("conv", "inner"), "normal", 0.5),
+        "conv_B": ParamSpec((s.conv_width, GN), ("conv", "state"), "normal", 0.5),
+        "conv_C": ParamSpec((s.conv_width, GN), ("conv", "state"), "normal", 0.5),
+        "A_log": ParamSpec((H,), ("heads",), "zeros"),   # A = -exp(A_log) = -1
+        "D": ParamSpec((H,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((H,), ("heads",), "zeros"),
+        "gate_norm": ParamSpec((d_in,), ("inner",), "ones"),
+        "w_out": ParamSpec((d_in, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, prepend=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (W, C); prepend: (B, W-1, C)|None."""
+    W = w.shape[0]
+    if prepend is None:
+        prepend = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prepend, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    return out
+
+
+def _project(cfg, p, x):
+    """x: (B,S,D) -> z, xh (B,S,H,P), Bm/Cm (B,S,G,N), dt (B,S,H) [post conv+act]."""
+    s = cfg.ssm
+    d_in, H = ssm_dims(cfg)
+    xc = cast_compute(x)
+    z = xc @ cast_compute(p["w_z"])
+    xs = xc @ cast_compute(p["w_x"])
+    Bs = xc @ cast_compute(p["w_B"])
+    Cs = xc @ cast_compute(p["w_C"])
+    dt = (xc @ cast_compute(p["w_dt"])).astype(jnp.float32)
+    xs = jax.nn.silu(_causal_conv(xs, cast_compute(p["conv_x"])).astype(jnp.float32)).astype(xc.dtype)
+    Bs = jax.nn.silu(_causal_conv(Bs, cast_compute(p["conv_B"])).astype(jnp.float32)).astype(xc.dtype)
+    Cs = jax.nn.silu(_causal_conv(Cs, cast_compute(p["conv_C"])).astype(jnp.float32)).astype(xc.dtype)
+    B, S, _ = x.shape
+    xh = xs.reshape(B, S, H, s.head_dim)
+    Bm = Bs.reshape(B, S, s.n_groups, s.d_state)
+    Cm = Cs.reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return z, xh, Bm, Cm, dt
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD forward.  xh: (B,S,H,P); dt: (B,S,H) f32; A: (H,) f32 (negative);
+    Bm/Cm: (B,S,G,N).  Returns y: (B,S,H,P) and final state (B,H,P,N)."""
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    HG = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(xh.dtype)  # dt-weighted input
+    dA = dt * A[None, None, :]                                       # (B,S,H) f32, <=0
+
+    # chunk views
+    xc = xdt.reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, G, N)
+    Cc = Cm.reshape(B, nc, Q, G, N)
+    dAc = dA.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(dAc, axis=2)                                    # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic, per chunk) ---
+    CB = jnp.einsum("bcign,bcjgn->bcgij", cast_compute(Cc), cast_compute(Bc),
+                    preferred_element_type=jnp.float32)              # (B,nc,G,Q,Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]              # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)  # (B,nc,Qi,Qj,H)
+    CBh = jnp.repeat(CB, HG, axis=2) if G > 1 else jnp.broadcast_to(
+        CB, (B, nc, H, Q, Q)) if G == 1 else CB
+    M = CBh * L.transpose(0, 1, 4, 2, 3)                             # (B,nc,H,Qi,Qj)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M.astype(xc.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)                     # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, HG, axis=3) if G > 1 else jnp.broadcast_to(
+        Bc, (B, nc, Q, H, N)) if G == 1 else Bc
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn",
+                        cast_compute(Bh), decay_out.astype(jnp.bfloat16),
+                        xc, preferred_element_type=jnp.float32)      # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (serial scan over nc chunks) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                          # (B,nc,H)
+
+    def body(h, inp):
+        st, dec = inp                                                # (B,H,P,N),(B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                              # emit state *entering* chunk
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, prev = jax.lax.scan(body, h0, (states.swapaxes(0, 1),
+                                            chunk_decay.swapaxes(0, 1)))
+    prev = prev.swapaxes(0, 1)                                       # (B,nc,H,P,N)
+
+    # --- off-diagonal contribution ---
+    Ch = jnp.repeat(Cc, HG, axis=3) if G > 1 else jnp.broadcast_to(
+        Cc, (B, nc, Q, H, N)) if G == 1 else Cc
+    decay_in = jnp.exp(cum)                                          # (B,nc,Q,H)
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp",
+                       cast_compute(Ch), prev.astype(jnp.bfloat16),
+                       decay_in.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, h_final
+
+
+def ssm_block(cfg, p: dict, x, ctx=None):
+    """Full Mamba2 block for train/prefill.  x: (B,S,D) -> (B,S,D)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    z, xh, Bm, Cm, dt = _project(cfg, p, x)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if ctx is not None:
+        xh = ctx.constrain(xh, "batch", None, "heads", None)
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk_size)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    d_in, H = ssm_dims(cfg)
+    y = y.reshape(B, S, d_in)
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    return (cast_compute(y) @ cast_compute(p["w_out"])).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+def ssm_cache_shapes(cfg, batch: int):
+    s = cfg.ssm
+    d_in, H = ssm_dims(cfg)
+    GN = s.n_groups * s.d_state
+    W = s.conv_width
+    return {
+        "state": ((batch, H, s.head_dim, s.d_state), ("batch", "heads", None, None),
+                  jnp.float32),
+        "conv_x": ((batch, W - 1, d_in), ("batch", None, "inner"), jnp.bfloat16),
+        "conv_B": ((batch, W - 1, GN), ("batch", None, "state"), jnp.bfloat16),
+        "conv_C": ((batch, W - 1, GN), ("batch", None, "state"), jnp.bfloat16),
+    }
+
+
+def ssm_decode(cfg, p: dict, x, cache: dict):
+    """x: (B,1,D); cache: dict of state/conv_x/conv_B/conv_C.  Returns (y, cache)."""
+    s = cfg.ssm
+    d_in, H = ssm_dims(cfg)
+    B = x.shape[0]
+    xc = cast_compute(x)
+    z = xc @ cast_compute(p["w_z"])
+    xs = xc @ cast_compute(p["w_x"])
+    Bs = xc @ cast_compute(p["w_B"])
+    Cs = xc @ cast_compute(p["w_C"])
+    dt = (xc @ cast_compute(p["w_dt"])).astype(jnp.float32)
+
+    def conv_step(val, w, prev):  # val (B,1,C), prev (B,W-1,C)
+        window = jnp.concatenate([prev, val.astype(prev.dtype)], axis=1)  # (B,W,C)
+        out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                         w.astype(jnp.float32))[:, None, :]
+        return jax.nn.silu(out).astype(val.dtype), window[:, 1:]
+
+    xs, conv_x = conv_step(xs, p["conv_x"], cache["conv_x"])
+    Bs, conv_B = conv_step(Bs, p["conv_B"], cache["conv_B"])
+    Cs, conv_C = conv_step(Cs, p["conv_C"], cache["conv_C"])
+
+    xh = xs.reshape(B, H, s.head_dim)
+    Bm = Bs.reshape(B, s.n_groups, s.d_state)
+    Cm = Cs.reshape(B, s.n_groups, s.d_state)
+    HG = H // s.n_groups
+    Bh = jnp.repeat(Bm, HG, axis=1)                                  # (B,H,N)
+    Ch = jnp.repeat(Cm, HG, axis=1)
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                                    # (B,H)
+
+    state = cache["state"]
+    state = state * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh.astype(jnp.float32), Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = (cast_compute(y) @ cast_compute(p["w_out"])).astype(x.dtype)
+    new_cache = {"state": state, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+    return out, new_cache

@@ -1,0 +1,96 @@
+"""Pure Mamba2 LM (attention-free)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_norm, cast_compute, chunked_softmax_xent,
+                                 embed_specs, embed_tokens, lm_logits, norm_specs,
+                                 rms_norm, stack_specs)
+from repro.models.ssm import (_project, ssd_chunked, ssm_block, ssm_cache_shapes,
+                              ssm_decode, ssm_dims, ssm_specs)
+from repro.models.variant import BASELINE, Variant, remat_wrap
+
+
+class SSMLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        block = {"ln": norm_specs(cfg, cfg.d_model), "ssm": ssm_specs(cfg)}
+        return {
+            "embed": embed_specs(cfg),
+            "blocks": stack_specs(block, cfg.n_layers),
+            "ln_f": norm_specs(cfg, cfg.d_model),
+        }
+
+    def hidden_states(self, params, tokens, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens)
+        x = ctx.constrain(x, "batch", "act_seq", None)
+
+        def body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, p["ln"], x)
+            return x + ssm_block(cfg, p["ssm"], h, ctx), None
+
+        x, _ = jax.lax.scan(remat_wrap(body, variant), x, params["blocks"])
+        return apply_norm(cfg, params["ln_f"], x)
+
+    def loss(self, params, batch, ctx, variant: Variant = BASELINE):
+        h = self.hidden_states(params, batch["tokens"], ctx, variant)
+        xent = chunked_softmax_xent(self.cfg, params["embed"], h, batch["labels"],
+                                    chunk=variant.xent_chunk,
+                                    unroll=variant.unroll)
+        return xent, {"xent": xent}
+
+    def cache_shapes(self, batch: int, seq_len: int) -> dict:
+        return ssm_cache_shapes(self.cfg, batch)
+
+    def prefill(self, params, tokens, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        W = cfg.ssm.conv_width
+
+        def body(x, p):
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, p["ln"], x)
+            z, xh, Bm, Cm, dt = _project(cfg, p["ssm"], h)
+            A = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+            y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk_size)
+            y = y + p["ssm"]["D"].astype(jnp.float32)[None, None, :, None] * \
+                xh.astype(jnp.float32)
+            d_in, H = ssm_dims(cfg)
+            y = y.reshape(B, S, d_in)
+            y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+            y = rms_norm(y.astype(x.dtype), p["ssm"]["gate_norm"], cfg.norm_eps)
+            out = x + (cast_compute(y) @ cast_compute(p["ssm"]["w_out"])).astype(x.dtype)
+            xc = cast_compute(h)
+            entry = {
+                "state": state,
+                "conv_x": (xc @ cast_compute(p["ssm"]["w_x"]))[:, S - (W - 1):, :],
+                "conv_B": (xc @ cast_compute(p["ssm"]["w_B"]))[:, S - (W - 1):, :],
+                "conv_C": (xc @ cast_compute(p["ssm"]["w_C"]))[:, S - (W - 1):, :],
+            }
+            return out, entry
+
+        x, cache = jax.lax.scan(remat_wrap(body, variant), x, params["blocks"])
+        x = apply_norm(cfg, params["ln_f"], x[:, -1:, :])
+        return lm_logits(cfg, params["embed"], x)[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, pos, ctx,
+                    variant: Variant = BASELINE):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens)
+
+        def body(x, xs):
+            p, layer_cache = xs
+            h = apply_norm(cfg, p["ln"], x)
+            y, new_cache = ssm_decode(cfg, p["ssm"], h, layer_cache)
+            return x + y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = apply_norm(cfg, params["ln_f"], x)
+        return lm_logits(cfg, params["embed"], x), new_cache

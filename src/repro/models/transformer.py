@@ -1,0 +1,221 @@
+"""Decoder-only LM covering the dense, vlm (early-fusion) and moe families.
+
+Layers are scan-stacked: block params carry a leading (L, ...) dim and the
+forward pass is one ``lax.scan`` — HLO size is O(1) in depth, which keeps the
+512-device dry-run compiles tractable and matches production practice (MaxText).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (ParamSpec, apply_mlp, apply_norm,
+                                 chunked_softmax_xent, embed_specs, embed_tokens,
+                                 lm_logits, mlp_specs, norm_specs, stack_specs)
+from repro.models.variant import BASELINE, Variant, remat_wrap
+
+
+class DecoderLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_moe = cfg.moe is not None
+        self.is_mla = cfg.mla is not None
+
+    # -- parameters ----------------------------------------------------------
+    def block_specs(self) -> dict:
+        cfg = self.cfg
+        block = {
+            "ln1": norm_specs(cfg, cfg.d_model),
+            "attn": (mla_mod.mla_specs(cfg) if self.is_mla
+                     else attn.gqa_specs(cfg, cfg.d_model)),
+            "ln2": norm_specs(cfg, cfg.d_model),
+        }
+        if self.is_moe:
+            block["moe"] = moe_mod.moe_specs(cfg)
+        else:
+            block["mlp"] = mlp_specs(cfg, cfg.d_model, cfg.d_ff)
+        return block
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": embed_specs(cfg),
+            "blocks": stack_specs(self.block_specs(), cfg.n_layers),
+            "ln_f": norm_specs(cfg, cfg.d_model),
+        }
+
+    # -- forward -------------------------------------------------------------
+    def _block(self, p, x, ctx, variant: Variant, positions):
+        cfg = self.cfg
+        h = apply_norm(cfg, p["ln1"], x)
+        if self.is_mla:
+            a = mla_mod.mla_attention(cfg, p["attn"], h, positions=positions,
+                                      kv_block=variant.kv_block,
+                                      variant=variant.attn_variant, ctx=ctx,
+                                      unroll=variant.unroll)
+        else:
+            a = attn.gqa_attention(cfg, p["attn"], h, causal=True,
+                                   positions=positions,
+                                   kv_block=variant.kv_block,
+                                   variant=variant.attn_variant, ctx=ctx,
+                                   unroll=variant.unroll)
+        x = x + a
+        h = apply_norm(cfg, p["ln2"], x)
+        aux = jnp.zeros((), jnp.float32)
+        if self.is_moe:
+            y, aux = moe_mod.moe_layer(ctx, cfg, p["moe"], h,
+                                       capacity_factor=variant.moe_capacity_factor,
+                                       psum_dtype=variant.psum_dtype)
+        else:
+            y = apply_mlp(cfg, p["mlp"], h)
+        return x + y, aux
+
+    def hidden_states(self, params, tokens, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        x = ctx.constrain(x, "batch", "act_seq", None)
+        positions = jnp.arange(S)
+
+        def body(carry, layer_p):
+            x, aux = carry
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            y, a = self._block(layer_p, x, ctx, variant, positions)
+            return (y, aux + a), None
+
+        block_fn = remat_wrap(body, variant)
+        (x, aux), _ = jax.lax.scan(block_fn,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        x = apply_norm(cfg, params["ln_f"], x)
+        return x, aux / cfg.n_layers
+
+    def loss(self, params, batch, ctx, variant: Variant = BASELINE):
+        cfg = self.cfg
+        h, aux = self.hidden_states(params, batch["tokens"], ctx, variant)
+        xent = chunked_softmax_xent(cfg, params["embed"], h, batch["labels"],
+                                    chunk=variant.xent_chunk,
+                                    unroll=variant.unroll)
+        loss = xent
+        if self.is_moe:
+            loss = loss + cfg.moe.aux_loss_weight * aux
+        return loss, {"xent": xent, "aux": aux}
+
+    # -- serving ---------------------------------------------------------------
+    def cache_shapes(self, batch: int, seq_len: int) -> dict:
+        """Per-layer cache entry shapes/axes (stacked over layers by caller)."""
+        cfg = self.cfg
+        if self.is_mla:
+            m = cfg.mla
+            return {
+                "c": ((batch, seq_len, m.kv_lora_rank),
+                      ("batch", "kv_seq", None), jnp.bfloat16),
+                "k_rope": ((batch, seq_len, m.rope_head_dim),
+                           ("batch", "kv_seq", None), jnp.bfloat16),
+            }
+        hd = cfg.resolved_head_dim
+        return {
+            "k": ((batch, seq_len, cfg.n_kv_heads, hd),
+                  ("batch", "kv_seq", "kv_heads", None), jnp.bfloat16),
+            "v": ((batch, seq_len, cfg.n_kv_heads, hd),
+                  ("batch", "kv_seq", "kv_heads", None), jnp.bfloat16),
+        }
+
+    def prefill(self, params, tokens, ctx, variant: Variant = BASELINE):
+        """Full-sequence forward that also emits the per-layer cache.
+
+        Returns (last-position logits (B, V), cache stacked (L, ...)).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        positions = jnp.arange(S)
+
+        def body(carry, layer_p):
+            x = carry
+            x = ctx.constrain(x, "batch", "act_seq", None)
+            h = apply_norm(cfg, layer_p["ln1"], x)
+            if self.is_mla:
+                m = cfg.mla
+                inv = attn.rope_freqs(m.rope_head_dim, 1.0, cfg.rope_theta)
+                qn, qr, c, kr = mla_mod._project_latent(cfg, layer_p["attn"], h,
+                                                        positions, inv)
+                k_nope = jnp.einsum("bsr,rhk->bshk", c,
+                                    layer_p["attn"]["w_uk"].astype(qn.dtype))
+                v = jnp.einsum("bsr,rhk->bshk", c,
+                               layer_p["attn"]["w_uv"].astype(qn.dtype))
+                kr_h = jnp.broadcast_to(kr[:, :, None, :],
+                                        (B, S, cfg.n_heads, m.rope_head_dim))
+                q = jnp.concatenate([qn, qr], axis=-1)
+                k = jnp.concatenate([k_nope, kr_h], axis=-1)
+                o = attn.chunked_attention(q, k, v, causal=True,
+                                           kv_block=min(variant.kv_block, S),
+                                           ctx=ctx)
+                a = jnp.einsum("bshk,hkd->bsd", o,
+                               layer_p["attn"]["wo"].astype(o.dtype)).astype(x.dtype)
+                entry = {"c": c.astype(jnp.bfloat16),
+                         "k_rope": kr.astype(jnp.bfloat16)}
+            else:
+                inv = attn.rope_freqs(cfg.resolved_head_dim, cfg.rope_pct,
+                                      cfg.rope_theta)
+                q, k, v = attn.gqa_project_qkv(cfg, layer_p["attn"], h,
+                                               positions, inv)
+                o = attn.chunked_attention(q, k, v, causal=True,
+                                           kv_block=min(variant.kv_block, S),
+                                           ctx=ctx)
+                a = jnp.einsum("bshk,hkd->bsd", o,
+                               layer_p["attn"]["wo"].astype(o.dtype)).astype(x.dtype)
+                entry = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+            x = x + a
+            h = apply_norm(cfg, layer_p["ln2"], x)
+            if self.is_moe:
+                y, _ = moe_mod.moe_layer(ctx, cfg, layer_p["moe"], h,
+                                         capacity_factor=variant.moe_capacity_factor,
+                                         psum_dtype=variant.psum_dtype)
+            else:
+                y = apply_mlp(cfg, layer_p["mlp"], h)
+            return x + y, entry
+
+        block_fn = remat_wrap(body, variant)
+        x, cache = jax.lax.scan(block_fn, x, params["blocks"])
+        x = apply_norm(cfg, params["ln_f"], x[:, -1:, :])
+        logits = lm_logits(cfg, params["embed"], x)[:, 0]
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos, ctx,
+                    variant: Variant = BASELINE):
+        """tokens: (B, 1); cache: stacked (L, ...) pytree; pos: scalar int32."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens)
+
+        def body(x, xs):
+            layer_p, layer_cache = xs
+            h = apply_norm(cfg, layer_p["ln1"], x)
+            if self.is_mla:
+                a, c, kr = mla_mod.mla_decode(cfg, layer_p["attn"], h,
+                                              layer_cache["c"],
+                                              layer_cache["k_rope"], pos)
+                new_cache = {"c": c, "k_rope": kr}
+            else:
+                a, ck, cv = attn.gqa_decode(cfg, layer_p["attn"], h,
+                                            layer_cache["k"], layer_cache["v"], pos)
+                new_cache = {"k": ck, "v": cv}
+            x = x + a
+            h = apply_norm(cfg, layer_p["ln2"], x)
+            if self.is_moe:
+                y, _ = moe_mod.moe_layer(ctx, cfg, layer_p["moe"], h,
+                                         capacity_factor=variant.moe_capacity_factor,
+                                         psum_dtype=variant.psum_dtype)
+            else:
+                y = apply_mlp(cfg, layer_p["mlp"], h)
+            return x + y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = lm_logits(cfg, params["embed"], x)
+        return logits, new_cache

@@ -1,0 +1,114 @@
+"""Execution variants — the knobs the §Perf hillclimb turns."""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str = "baseline"
+    attn_variant: str = "masked"     # masked | folded (causal block skipping)
+    kv_block: int = 1024             # online-softmax KV block
+    remat: str = "full"              # full | dots | none
+    xent_chunk: int = 512            # chunked cross-entropy sequence block
+    moe_capacity_factor: float | None = None
+    psum_dtype: str = "float32"      # MoE combine psum precision (bf16 = beyond-paper)
+    use_pallas: bool = False         # TPU-only: flash-attention / SSD kernels
+    accum_steps: int = 1             # gradient-accumulation microbatches
+    adam_dtype: str = "float32"      # Adam moment storage (bf16 halves opt state)
+    unroll: bool = False             # unroll attention/xent scans (cost probes:
+                                     # XLA-CPU cost analysis counts loop bodies
+                                     # once — verified in EXPERIMENTS.md)
+    cast_params: bool = False        # cast f32 params->bf16 at step entry so
+                                     # FSDP all-gathers carry half the bytes
+    kv_cache_dtype: str = "bfloat16" # fp8 cache halves decode HBM traffic
+    seq_parallel: bool = True        # shard residual seq dim over model (SP);
+                                     # False = pure-TP (fewer reshard hops,
+                                     # larger saved activations)
+    cache_layout: str = "seq"        # decode KV cache: shard "seq" or "heads"
+                                     # over the model axis
+
+
+BASELINE = Variant()
+
+# Named variants — the §Perf hillclimb moves through these.
+VARIANTS: dict[str, Variant] = {
+    "baseline": BASELINE,
+    # beyond-paper candidates (see EXPERIMENTS.md §Perf for the iteration log)
+    "folded_attn": replace(BASELINE, name="folded_attn", attn_variant="folded"),
+    "remat_dots": replace(BASELINE, name="remat_dots", remat="dots"),
+    "kvblock_2048": replace(BASELINE, name="kvblock_2048", kv_block=2048),
+    "kvblock_4096": replace(BASELINE, name="kvblock_4096", kv_block=4096),
+    "xent_2048": replace(BASELINE, name="xent_2048", xent_chunk=2048),
+    "cap_1.0": replace(BASELINE, name="cap_1.0", moe_capacity_factor=1.0),
+    "folded_remat_dots": replace(BASELINE, name="folded_remat_dots",
+                                 attn_variant="folded", remat="dots"),
+    # single-pod fit for the 200B+ archs: f32 p+m+v alone is 11.4 GiB/device at
+    # 256-way sharding; bf16 moments + microbatching is the standard remedy.
+    "fit_single_pod": replace(BASELINE, name="fit_single_pod",
+                              adam_dtype="bfloat16", accum_steps=4),
+    "accum4": replace(BASELINE, name="accum4", accum_steps=4),
+    # --- §Perf hillclimb ladder (beyond-paper optimizations) ---
+    "cast_bf16": replace(BASELINE, name="cast_bf16", cast_params=True),
+    "cast_folded": replace(BASELINE, name="cast_folded", cast_params=True,
+                           attn_variant="folded"),
+    "cast_dots": replace(BASELINE, name="cast_dots", cast_params=True,
+                         remat="dots"),
+    "cast_folded_dots": replace(BASELINE, name="cast_folded_dots",
+                                cast_params=True, attn_variant="folded",
+                                remat="dots"),
+    "fp8_cache": replace(BASELINE, name="fp8_cache",
+                         kv_cache_dtype="float8_e4m3fn"),
+    "fp8_heads": replace(BASELINE, name="fp8_heads",
+                         kv_cache_dtype="float8_e4m3fn",
+                         cache_layout="heads"),
+    "moe_opt": replace(BASELINE, name="moe_opt", cast_params=True,
+                       psum_dtype="bfloat16", moe_capacity_factor=1.0),
+    "moe_opt_accum": replace(BASELINE, name="moe_opt_accum", cast_params=True,
+                             psum_dtype="bfloat16", moe_capacity_factor=1.0,
+                             accum_steps=4, adam_dtype="bfloat16"),
+    "nosp": replace(BASELINE, name="nosp", seq_parallel=False),
+    "cast_dots_nosp": replace(BASELINE, name="cast_dots_nosp",
+                              cast_params=True, remat="dots",
+                              seq_parallel=False),
+    "dots_nosp_accum": replace(BASELINE, name="dots_nosp_accum",
+                               cast_params=True, remat="dots",
+                               seq_parallel=False, accum_steps=4),
+    "best_a": replace(BASELINE, name="best_a", cast_params=True, remat="dots",
+                      seq_parallel=False, attn_variant="folded"),
+    "nosp_accum4": replace(BASELINE, name="nosp_accum4", cast_params=True,
+                           seq_parallel=False, accum_steps=4),
+    "accum2_folded": replace(BASELINE, name="accum2_folded", cast_params=True,
+                             attn_variant="folded", accum_steps=2),
+    "moe_best": replace(BASELINE, name="moe_best", cast_params=True,
+                        psum_dtype="bfloat16", moe_capacity_factor=1.0,
+                        remat="dots", seq_parallel=False),
+    "moe_dots_sp": replace(BASELINE, name="moe_dots_sp", cast_params=True,
+                           psum_dtype="bfloat16", moe_capacity_factor=1.0,
+                           remat="dots", accum_steps=2),
+    "moe_dots_accum4": replace(BASELINE, name="moe_dots_accum4",
+                               cast_params=True, psum_dtype="bfloat16",
+                               moe_capacity_factor=1.0, remat="dots",
+                               accum_steps=4, adam_dtype="bfloat16"),
+}
+
+
+def apply_rules(ctx, variant: Variant):
+    """Adjust a ShardCtx's logical rules for variant-level sharding choices."""
+    if not variant.seq_parallel:
+        ctx.rules["act_seq"] = [None]
+    if variant.cache_layout == "heads":
+        # KV heads take the model axis; cache seq stays local per shard =>
+        # no cross-shard softmax combine, no psum in the decode inner loop
+        ctx.rules["kv_seq"] = [("data",), None]
+    return ctx
+
+
+def remat_wrap(fn, variant: Variant):
+    import jax
+    if variant.remat == "none":
+        return fn
+    if variant.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)

@@ -1,0 +1,80 @@
+"""AdamW with decoupled weight decay (optax is not available in this env).
+
+Moments are f32 and share the parameter sharding (ZeRO: params are already
+fully sharded over fsdp x model, so optimizer state is too — no extra wiring).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, params, state, grads):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt = m.dtype  # moments may be stored bf16 ("fit_single_pod" variant)
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

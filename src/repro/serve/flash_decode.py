@@ -1,0 +1,91 @@
+"""Sequence-sharded decode attention (flash-decode with log-sum-exp combine).
+
+For ``long_500k`` (batch 1, 524k-token KV cache) the batch axis cannot shard, so
+the KV cache shards over the ``data`` axis on its *sequence* dim.  Each shard
+computes partial attention over its local KV chunk plus a local log-sum-exp; the
+numerically-stable combine is a psum of (exp-rescaled numerator, denominator)
+pairs — the standard flash-decode reduction, expressed with shard_map + psum.
+
+The single new (k, v) entry is written only by the shard that owns position
+``pos`` (masked dynamic-update-slice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import gqa_project_qkv, rope_freqs
+from repro.models.common import cast_compute
+
+
+def seq_sharded_gqa_decode(ctx, cfg, p, x, cache_k, cache_v, pos):
+    """x: (B,1,D); cache_(k|v): (B,S,KV,hd) sharded P(batch?, 'data', kv_heads?, None).
+
+    Returns (out (B,1,D), new_k, new_v).
+    """
+    mesh = ctx.mesh
+    seq_axis = "data"
+    tp = ctx.tp_axis
+    B, S, KV, hd = cache_k.shape
+    H = cfg.n_heads
+    G = H // KV
+    n_shards = mesh.shape[seq_axis] if seq_axis in mesh.axis_names else 1
+    S_local = S // n_shards
+
+    inv_freq = rope_freqs(hd, cfg.rope_pct, cfg.rope_theta)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = gqa_project_qkv(cfg, p, x, positions, inv_freq)
+
+    tp_ok = bool(tp) and tp in mesh.axis_names and KV % mesh.shape[tp] == 0 \
+        and H % mesh.shape[tp] == 0
+    tp_ax = tp if tp_ok else None
+    kv_spec = P(None, seq_axis if n_shards > 1 else None, tp_ax, None)
+    h_spec = P(None, None, tp_ax, None)      # (B, 1, heads, hd)
+    o_spec = P(None, tp_ax, None, None)      # (B, KV, G, hd)
+
+    def body(q, k_new, v_new, ck, cv):
+        # shard-local coordinates
+        sid = jax.lax.axis_index(seq_axis) if n_shards > 1 else 0
+        start = sid * S_local
+        rel = pos - start
+        owns = (rel >= 0) & (rel < S_local)
+        rel_c = jnp.clip(rel, 0, S_local - 1)
+        k_upd = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype),
+                                             (0, rel_c, 0, 0))
+        ck = jnp.where(owns, k_upd, ck)
+        v_upd = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype),
+                                             (0, rel_c, 0, 0))
+        cv = jnp.where(owns, v_upd, cv)
+
+        qh = cast_compute(q).reshape(B, -1, G, hd)   # (B, KV_local, G, hd)
+        s = jnp.einsum("bkgd,bjkd->bkgj", qh, cast_compute(ck),
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(hd))
+        valid = (jnp.arange(S_local)[None, None, None, :] + start) <= pos
+        s = jnp.where(valid, s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)                    # local max
+        e = jnp.exp(s - m)
+        num = jnp.einsum("bkgj,bjkd->bkgd", e.astype(jnp.bfloat16),
+                         cast_compute(cv), preferred_element_type=jnp.float32)
+        den = jnp.sum(e, axis=-1)                                 # (B,KV,G)
+        if n_shards > 1:
+            gmax = jax.lax.pmax(m[..., 0], seq_axis)              # (B,KV,G)
+            scale = jnp.exp(m[..., 0] - gmax)
+            num = jax.lax.psum(num * scale[..., None], seq_axis)
+            den = jax.lax.psum(den * scale, seq_axis)
+        out = num / jnp.maximum(den, 1e-30)[..., None]            # (B,KV,G,hd)
+        return out.astype(q.dtype), ck, cv
+
+    if n_shards > 1 or tp_ok:
+        shard_fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(h_spec, h_spec, h_spec, kv_spec, kv_spec),
+            out_specs=(o_spec, kv_spec, kv_spec), check_vma=False)
+        o, new_k, new_v = shard_fn(q, k_new, v_new, cache_k, cache_v)
+    else:
+        o, new_k, new_v = body(q, k_new, v_new, cache_k, cache_v)
+
+    o = o.reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", cast_compute(o), cast_compute(p["wo"]))
+    return out.astype(x.dtype), new_k, new_v

@@ -1,0 +1,95 @@
+"""Training / serving step factories (the functions the dry-run lowers).
+
+``make_train_step``: value_and_grad over the model loss + AdamW, with optional
+gradient accumulation (scanned microbatches) and optional int8 error-feedback
+gradient compression on the data-parallel reduction.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import build
+from repro.models.variant import BASELINE, Variant
+from repro.optim import adamw
+
+
+def make_train_step(cfg, ctx, opt_cfg: adamw.AdamWConfig | None = None,
+                    variant: Variant = BASELINE, accum_steps: int | None = None,
+                    grad_compression: bool = False):
+    """grad_compression=True: int8 error-feedback quantization of gradients
+    before the optimizer (models the compressed DP all-reduce; the error
+    residual lives in opt_state["ef_error"])."""
+    model = build(cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    accum_steps = accum_steps if accum_steps is not None else variant.accum_steps
+
+    def loss_fn(params, batch):
+        if variant.cast_params:
+            # bf16 weights at step entry: every downstream FSDP all-gather
+            # carries half the wire bytes (grads still flow f32 via the cast's
+            # transpose).  1D params (norms/scales) stay f32.
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if (p.dtype == jnp.float32 and p.ndim > 1) else p, params)
+        loss, metrics = model.loss(params, batch, ctx, variant)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum_steps > 1:
+            def micro(carry, mb):
+                acc, = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g),), (l, m)
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum,), (losses, metrics) = jax.lax.scan(micro, (zero,), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        if grad_compression:
+            from repro.optim.compression import compress_grads
+            grads, new_err = compress_grads(grads, opt_state["ef_error"])
+        new_params, new_opt, opt_metrics = adamw.apply(
+            opt_cfg, params,
+            {k: v for k, v in opt_state.items() if k != "ef_error"}, grads)
+        if grad_compression:
+            new_opt["ef_error"] = new_err
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, ctx, variant: Variant = BASELINE):
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            return model.prefill(params, batch, ctx, variant)
+        return model.prefill(params, batch["tokens"], ctx, variant)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, ctx, variant: Variant = BASELINE,
+                     seq_shard_decode: bool = False):
+    model = build(cfg)
+
+    def decode_step(params, cache, batch, pos):
+        kwargs = {}
+        if cfg.family == "hybrid":
+            kwargs["seq_shard_decode"] = seq_shard_decode
+        logits, new_cache = model.decode_step(params, cache, batch["tokens"],
+                                              pos, ctx, variant, **kwargs)
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,136 @@
+"""Resilient training loop: checkpoint/resume, SIGTERM emergency save,
+straggler monitoring, elastic restart.
+
+The loop is deliberately plain python around one pjit'd step — every
+production concern (resume, async save, drift detection, preemption) lives
+out here where it can be unit-tested on CPU meshes.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data.pipeline import make_pipeline
+from repro.distributed.sharding import ShardCtx
+from repro.ft.stragglers import StepTimer
+from repro.models.common import abstract_params, init_params, logical_axes
+from repro.models.registry import build
+from repro.models.variant import BASELINE, Variant
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    log_every: int = 10
+    seed: int = 0
+    async_ckpt: bool = True
+    grad_compression: bool = False   # int8 error-feedback DP gradient reduce
+    opt: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, arch_cfg, shape, mesh, tcfg: TrainConfig,
+                 variant: Variant = BASELINE):
+        self.cfg = arch_cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.variant = variant
+        self.ctx = ShardCtx(mesh)
+        self.model = build(arch_cfg)
+        self.pipeline = make_pipeline(arch_cfg, shape, self.ctx, seed=tcfg.seed)
+        self.step_timer = StepTimer()
+        self._interrupted = False
+
+        specs = self.model.param_specs()
+        self.p_shardings = self.ctx.tree_shardings(abstract_params(specs),
+                                                   logical_axes(specs))
+        self.step_fn = jax.jit(
+            make_train_step(arch_cfg, self.ctx, opt_cfg=tcfg.opt,
+                            variant=variant,
+                            grad_compression=tcfg.grad_compression),
+            donate_argnums=(0, 1))
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.key(self.tcfg.seed)
+        specs = self.model.param_specs()
+        params = init_params(specs, rng)
+        params = jax.tree.map(jax.device_put, params,
+                              self.p_shardings)
+        opt_state = adamw.init_state(params)
+        if self.tcfg.grad_compression:
+            from repro.optim.compression import init_error
+            opt_state["ef_error"] = init_error(params)
+        return params, opt_state, 0
+
+    def restore_or_init(self):
+        """Elastic resume: restores onto the *current* mesh regardless of the
+        mesh the checkpoint was written on."""
+        step = ckpt.latest_step(self.tcfg.ckpt_dir)
+        params, opt_state, start = self.init_state()
+        if step is None:
+            return params, opt_state, 0
+        opt_sh = {"mu": self.p_shardings, "nu": self.p_shardings, "step": None}
+        if "ef_error" in opt_state:
+            opt_sh["ef_error"] = self.p_shardings
+        tree_like = {"params": params, "opt": opt_state}
+        shardings = {"params": self.p_shardings, "opt": opt_sh}
+        restored, manifest = ckpt.restore(self.tcfg.ckpt_dir, tree_like,
+                                          shardings)
+        return restored["params"], restored["opt"], manifest["step"]
+
+    # -- loop ---------------------------------------------------------------
+    def _handle_sigterm(self, *_):
+        self._interrupted = True
+
+    def train(self, resume: bool = True):
+        tcfg = self.tcfg
+        if resume:
+            params, opt_state, start = self.restore_or_init()
+        else:
+            params, opt_state, start = self.init_state()
+        old = signal.signal(signal.SIGTERM, self._handle_sigterm)
+        history = []
+        try:
+            with jax.set_mesh(self.mesh):
+                for step in range(start, tcfg.steps):
+                    batch = self.pipeline.batch(step)
+                    t0 = time.perf_counter()
+                    params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                              batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    slow = self.step_timer.update(step, dt)
+                    if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        history.append({"step": step, "dt": dt, **m})
+                        print(f"step {step:5d} loss={m['loss']:.4f} "
+                              f"gnorm={m.get('grad_norm', 0):.3f} "
+                              f"dt={dt*1e3:.0f}ms{' SLOW' if slow else ''}")
+                    if self._interrupted:
+                        print("SIGTERM: emergency checkpoint")
+                        ckpt.save(tcfg.ckpt_dir, step + 1,
+                                  {"params": params, "opt": opt_state},
+                                  blocking=True)
+                        break
+                    if (step + 1) % tcfg.ckpt_every == 0:
+                        ckpt.save(tcfg.ckpt_dir, step + 1,
+                                  {"params": params, "opt": opt_state},
+                                  extra={"arch": self.cfg.name},
+                                  blocking=not tcfg.async_ckpt)
+            ckpt.wait_async()
+        finally:
+            signal.signal(signal.SIGTERM, old)
+        return params, opt_state, history

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device by design;
+multi-device tests spawn subprocesses with the flag set explicitly."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def smoke_ctx():
+    from repro.distributed.sharding import make_smoke_ctx
+    return make_smoke_ctx()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,71 @@
+"""Config registry: the 10 assigned archs, param counts, shape support."""
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs, param_count, reduced
+
+ASSIGNED = {
+    "whisper-medium", "deepseek-v2-236b", "arctic-480b", "chameleon-34b",
+    "mamba2-2.7b", "internlm2-20b", "phi3-medium-14b", "stablelm-3b",
+    "granite-3-2b", "zamba2-2.7b",
+}
+
+# advertised sizes (billions) and tolerance — checks the configs actually
+# build the models their names claim
+EXPECTED_B = {
+    "whisper-medium": (0.76, 0.15), "deepseek-v2-236b": (236, 0.06),
+    "arctic-480b": (480, 0.05), "chameleon-34b": (34, 0.05),
+    "mamba2-2.7b": (2.7, 0.1), "internlm2-20b": (20, 0.05),
+    "phi3-medium-14b": (14, 0.08), "stablelm-3b": (2.8, 0.15),
+    "granite-3-2b": (2.5, 0.1), "zamba2-2.7b": (2.7, 0.15),
+}
+
+
+def test_all_assigned_archs_registered():
+    assert set(list_archs()) == ASSIGNED
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_param_count_matches_name(name):
+    total, active = param_count(get_arch(name))
+    exp, tol = EXPECTED_B[name]
+    assert abs(total / 1e9 - exp) / exp < max(tol, 0.1) + 0.05, \
+        f"{name}: {total/1e9:.2f}B vs expected {exp}B"
+    assert 0 < active <= total
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_config_valid(name):
+    cfg = reduced(get_arch(name))
+    assert cfg.n_layers <= 2 or cfg.family == "hybrid"
+    assert cfg.d_model <= 256
+    assert cfg.family == get_arch(name).family
+
+
+def test_shape_assignments():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_skips():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runnable = {a for a in list_archs()
+                if get_arch(a).supports_shape(SHAPES["long_500k"])[0]}
+    assert runnable == {"mamba2-2.7b", "zamba2-2.7b"}
+
+
+def test_whisper_is_encdec_with_decode():
+    cfg = get_arch("whisper-medium")
+    ok, _ = cfg.supports_shape(SHAPES["decode_32k"])
+    assert ok, "whisper is encoder-decoder, decode must be supported"
+
+
+def test_moe_configs():
+    ds = get_arch("deepseek-v2-236b")
+    assert ds.moe.n_experts == 160 and ds.moe.top_k == 6
+    assert ds.moe.n_shared_experts == 2
+    assert ds.mla.kv_lora_rank == 512
+    arc = get_arch("arctic-480b")
+    assert arc.moe.n_experts == 128 and arc.moe.top_k == 2
+    assert arc.moe.dense_residual

@@ -1,0 +1,101 @@
+"""MoE layer: conservation, capacity, aux loss, determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs import get_arch, reduced
+from repro.distributed.sharding import make_smoke_ctx
+from repro.models.common import init_params
+from repro.models.moe import moe_layer, moe_specs
+
+CTX = make_smoke_ctx()
+
+
+def _moe_setup(top_k=1, n_experts=4, cf=8.0):
+    cfg = reduced(get_arch("deepseek-v2-236b"))
+    cfg = replace(cfg, moe=replace(cfg.moe, top_k=top_k, n_experts=n_experts,
+                                   capacity_factor=cf, n_shared_experts=0))
+    params = init_params(moe_specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def _dense_expert_oracle(cfg, p, x):
+    """Route each token to its argmax expert with NO capacity limit."""
+    T, D = x.shape
+    xc = x.astype(jnp.bfloat16)
+    logits = (xc @ p["router"].astype(jnp.bfloat16)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    eidx = jnp.argmax(probs, axis=-1)
+    w = jnp.take_along_axis(probs, eidx[:, None], axis=1)[:, 0]
+    w = w / w  # top-1 normalized weight == 1
+    outs = []
+    for t in range(T):
+        e = int(eidx[t])
+        g = xc[t] @ p["w_gate"][e].astype(jnp.bfloat16)
+        u = xc[t] @ p["w_up"][e].astype(jnp.bfloat16)
+        h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(jnp.bfloat16)
+        outs.append((h @ p["w_down"][e].astype(jnp.bfloat16)).astype(jnp.float32))
+    return jnp.stack(outs) * w[:, None]
+
+
+def test_moe_matches_dense_oracle_top1():
+    """top-1 with generous capacity == per-token dense expert compute."""
+    cfg, params = _moe_setup(top_k=1, cf=8.0)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model),
+                          jnp.bfloat16) * 0.5
+    with jax.set_mesh(CTX.mesh):
+        y, aux = jax.jit(lambda p, x: moe_layer(CTX, cfg, p, x))(params, x)
+    ref = _dense_expert_oracle(cfg, params, x.reshape(-1, cfg.d_model))
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model), np.float32),
+                               np.asarray(ref), rtol=5e-2, atol=5e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    """capacity_factor -> 0 forces drops => output partially zero."""
+    cfg, params = _moe_setup(top_k=1, cf=8.0)
+    x = jax.random.normal(jax.random.key(2), (2, 32, cfg.d_model),
+                          jnp.bfloat16) * 0.5
+    with jax.set_mesh(CTX.mesh):
+        y_full, _ = jax.jit(lambda p, x: moe_layer(CTX, cfg, p, x,
+                                                   capacity_factor=8.0))(params, x)
+        y_tight, _ = jax.jit(lambda p, x: moe_layer(CTX, cfg, p, x,
+                                                    capacity_factor=0.1))(params, x)
+    # tight capacity must zero-out some token outputs that full capacity kept
+    full_nz = np.abs(np.asarray(y_full, np.float32)).sum(-1) > 1e-6
+    tight_nz = np.abs(np.asarray(y_tight, np.float32)).sum(-1) > 1e-6
+    assert tight_nz.sum() < full_nz.sum()
+
+
+def test_moe_aux_loss_range():
+    cfg, params = _moe_setup(top_k=2, cf=2.0)
+    x = jax.random.normal(jax.random.key(3), (2, 64, cfg.d_model), jnp.bfloat16)
+    with jax.set_mesh(CTX.mesh):
+        _, aux = jax.jit(lambda p, x: moe_layer(CTX, cfg, p, x))(params, x)
+    # balanced routing gives aux ~= E * K/E... switch aux: >= 1 (K normalization)
+    assert 0.5 < float(aux) < float(cfg.moe.n_experts) * 2
+
+
+def test_moe_deterministic():
+    cfg, params = _moe_setup(top_k=2)
+    x = jax.random.normal(jax.random.key(4), (1, 16, cfg.d_model), jnp.bfloat16)
+    with jax.set_mesh(CTX.mesh):
+        f = jax.jit(lambda p, x: moe_layer(CTX, cfg, p, x)[0])
+        np.testing.assert_array_equal(np.asarray(f(params, x)),
+                                      np.asarray(f(params, x)))
+
+
+def test_moe_gradients_flow_to_experts_and_router():
+    cfg, params = _moe_setup(top_k=2, cf=4.0)
+    x = jax.random.normal(jax.random.key(5), (2, 16, cfg.d_model), jnp.bfloat16)
+
+    def loss(p):
+        y, aux = moe_layer(CTX, cfg, p, x)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * aux
+
+    with jax.set_mesh(CTX.mesh):
+        g = jax.jit(jax.grad(loss))(params)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+    assert float(jnp.abs(g["w_gate"]).sum()) > 0
+    assert float(jnp.abs(g["w_down"]).sum()) > 0

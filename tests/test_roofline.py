@@ -1,0 +1,69 @@
+"""Roofline analyzer: HLO collective parsing, ring model, end-to-end analyze."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.analyze import (CollectiveOp, RooflineTerms, _shape_bytes,
+                                    analyze, parse_collectives)
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %ar = f32[512,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag.1 = bf16[64,256]{1,0} all-gather(%y), replica_groups=[8,2]<=[16], dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+  %a2a = (f32[32,32]{1,0}, f32[32,32]{1,0}) all-to-all(%p, %q), replica_groups={{0,1,2,3}}
+  %cp = u32[16]{0} collective-permute(%r), source_target_pairs={{0,1},{1,0}}
+  %done = f32[512,1024]{1,0} all-reduce-done(%ar2)
+  %notacoll = f32[8,8]{1,0} add(%a, %b)
+}
+"""
+
+
+def test_parse_collectives():
+    ops = parse_collectives(SAMPLE_HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.bytes == 512 * 1024 * 4
+    assert ar.group_size == 4
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.bytes == 64 * 256 * 2
+    assert ag.group_size == 2                 # v2 format [8,2]
+    a2a = next(o for o in ops if o.kind == "all-to-all")
+    assert a2a.bytes == 2 * 32 * 32 * 4       # tuple shape: both operands
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(f32[4,4], bf16[8])") == 4 * 4 * 4 + 8 * 2
+    assert _shape_bytes("pred[16]") == 16
+
+
+def test_ring_model():
+    t = RooflineTerms(flops=0, hbm_bytes=0, collectives=[
+        CollectiveOp("all-reduce", 1000_000_000, 4)])
+    # 2*(n-1)/n * bytes / 50e9 = 1.5e9/50e9
+    assert t.t_collective == pytest.approx(2 * 3 / 4 * 1e9 / 50e9)
+    t2 = RooflineTerms(flops=197e12, hbm_bytes=819e9, collectives=[])
+    assert t2.t_compute == pytest.approx(1.0)
+    assert t2.t_memory == pytest.approx(1.0)
+    assert t2.t_collective == 0.0
+
+
+def test_dominant_term():
+    t = RooflineTerms(flops=197e12, hbm_bytes=1, collectives=[])
+    assert t.dominant == "compute"
+    t = RooflineTerms(flops=1, hbm_bytes=819e9 * 10, collectives=[])
+    assert t.dominant == "memory"
+
+
+def test_analyze_end_to_end():
+    f = jax.jit(lambda a, b: (a @ b).sum())
+    c = f.lower(jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                jax.ShapeDtypeStruct((256, 256), jnp.float32)).compile()
+    rec = analyze(c, model_flops=2 * 256**3)
+    assert rec["flops"] > 0
+    assert rec["t_compute_s"] > 0
+    assert 0 < rec["useful_flop_ratio"] <= 1.5
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    assert rec["peak_device_bytes"] > 0

@@ -1,0 +1,160 @@
+"""End-to-end system tests: trainer loop with resume, serving loop, and the
+multi-device (8 forced host devices) integration paths via subprocess."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def test_trainer_loss_decreases(tmp_path):
+    from repro.configs import get_arch, reduced
+    from repro.launch.mesh import make_mesh
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = reduced(get_arch("granite-3-2b"))
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    tcfg = TrainConfig(steps=12, ckpt_every=6, ckpt_dir=str(tmp_path),
+                       log_every=2,
+                       opt=adamw.AdamWConfig(lr=2e-3, warmup_steps=2,
+                                             total_steps=12))
+    tr = Trainer(cfg, (4, 64), mesh, tcfg)
+    _, _, hist = tr.train(resume=False)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_trainer_resume_from_checkpoint(tmp_path):
+    from repro.configs import get_arch, reduced
+    from repro.launch.mesh import make_mesh
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = reduced(get_arch("granite-3-2b"))
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=16)
+    t1 = Trainer(cfg, (4, 64), mesh,
+                 TrainConfig(steps=8, ckpt_every=4, ckpt_dir=str(tmp_path),
+                             log_every=4, opt=opt))
+    t1.train(resume=False)
+    t2 = Trainer(cfg, (4, 64), mesh,
+                 TrainConfig(steps=12, ckpt_every=4, ckpt_dir=str(tmp_path),
+                             log_every=4, opt=opt))
+    _, _, hist = t2.train(resume=True)
+    assert hist[0]["step"] >= 8
+
+
+def test_serve_generates_tokens():
+    from repro.configs import get_arch, reduced
+    from repro.distributed.sharding import make_smoke_ctx
+    from repro.models.common import init_params
+    from repro.models.registry import build, init_cache, make_batch
+    from repro.models.variant import BASELINE
+
+    ctx = make_smoke_ctx()
+    cfg = reduced(get_arch("granite-3-2b"))
+    model = build(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0))
+    B, prompt_len, gen = 2, 8, 8
+    batch = make_batch(cfg, (B, prompt_len), jax.random.key(1))
+    cache = init_cache(cfg, B, prompt_len + gen)
+    with jax.set_mesh(ctx.mesh):
+        dec = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos, ctx,
+                                                             BASELINE))
+        toks = batch["tokens"][:, :1]
+        out_tokens = []
+        c = cache
+        for i in range(prompt_len + gen - 1):
+            logits, c = dec(params, c, toks, jnp.int32(i))
+            if i < prompt_len - 1:
+                toks = batch["tokens"][:, i + 1:i + 2]
+            else:
+                toks = jnp.argmax(logits[:, :, :cfg.vocab_size],
+                                  axis=-1).astype(jnp.int32)
+                out_tokens.append(toks)
+    assert len(out_tokens) == gen
+    for t in out_tokens:
+        assert t.shape == (B, 1)
+        assert int(t.min()) >= 0 and int(t.max()) < cfg.vocab_size
+
+
+MULTIDEV_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_arch, reduced
+from repro.distributed.sharding import ShardCtx
+from repro.launch.mesh import make_mesh
+from repro.models.common import abstract_params, init_params, logical_axes
+from repro.models.registry import build, make_batch
+from repro.models.variant import BASELINE
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+ctx = ShardCtx(mesh)
+cfg = reduced(get_arch("%ARCH%"))
+model = build(cfg)
+specs = model.param_specs()
+params = init_params(specs, jax.random.key(0))
+params = jax.device_put(params, ctx.tree_shardings(abstract_params(specs),
+                                                   logical_axes(specs)))
+batch = make_batch(cfg, (8, 64), jax.random.key(1))
+step = jax.jit(make_train_step(cfg, ctx, opt_cfg=adamw.AdamWConfig(lr=1e-3),
+                               variant=BASELINE))
+opt = adamw.init_state(params)
+with jax.set_mesh(mesh):
+    p2, o2, m = step(params, opt, batch)
+loss = float(m["loss"])
+assert loss == loss and 0 < loss < 20, loss
+print("MULTIDEV_OK", loss)
+"""
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-v2-236b",
+                                  "mamba2-2.7b"])
+def test_multidevice_train_step_subprocess(arch):
+    """Real 8-device SPMD train step (pod=2, data=2, model=2) incl. MoE EP."""
+    code = MULTIDEV_SNIPPET.replace("%ARCH%", arch)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MULTIDEV_OK" in r.stdout
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Checkpoint written on an 8-device mesh restores onto 1 device."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.checkpoint import checkpoint as ckpt
+from repro.distributed.sharding import ShardCtx
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+ctx = ShardCtx(mesh)
+w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+w = jax.device_put(w, ctx.sharding((8, 8), ("batch", "ffn")))
+ckpt.save("%DIR%", 3, {"w": w})
+print("SAVED")
+""".replace("%DIR%", str(tmp_path))
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    # restore in THIS process (1 device)
+    from repro.checkpoint import checkpoint as ckpt
+    import numpy as np
+    restored, manifest = ckpt.restore(tmp_path, {"w": jnp.zeros((8, 8))})
+    assert manifest["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(64, dtype=np.float32).reshape(8, 8))

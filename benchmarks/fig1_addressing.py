@@ -4,50 +4,39 @@ Host analogue: contiguous single-stream reduction vs S interleaved strided
 streams (stride = S x lane row).  On Arm the post-increment costs extra AGU
 uOPs; on a cached host CPU the strided walk defeats the linear prefetcher the
 same way — both are 'the address pattern, not the data volume, sets the rate'.
-The Pallas kernel exposes the same knob (streams=) natively for TPU runs.
+
+The strided kernel lives in core.instruction_mix (k_strided_sum); this script
+is just the BenchSpec declaration (streams = C3 knob) plus the figure's emit
+lines.  Relative throughput anchors on the streams=1 point per size via
+BenchResult.baseline_relative — an explicit presence check, so a 0.0 first
+measurement can no longer silently re-anchor the baseline.
 """
 from __future__ import annotations
 
 import argparse
-from functools import partial
-
-import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import buffers, timing
+from repro.bench import BenchSpec, Runner
 
-
-@partial(jax.jit, static_argnames=("streams", "passes"))
-def strided_sum(x, streams: int, passes: int):
-    def body(_, carry):
-        x, acc = carry
-        s = jnp.float32(0)
-        for k in range(streams):               # S interleaved address streams
-            s = s + jnp.sum(x[k::streams], dtype=jnp.float32)
-        eps = (s * 1e-30).astype(x.dtype).reshape(())
-        return (x.at[0, 0].add(eps), acc + s)
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
-    return acc
+STREAM_COUNTS = (1, 2, 4, 8)
 
 
 def main(quick: bool = False):
-    sizes = [32 * 2**10, 1 * 2**20, 32 * 2**20] if quick else \
-        [32 * 2**10, 256 * 2**10, 1 * 2**20, 8 * 2**20, 32 * 2**20, 128 * 2**20]
-    reps = 5 if quick else 10
-    for nbytes in sizes:
-        x = buffers.working_set(nbytes)
-        real = x.size * x.dtype.itemsize
-        passes = max(1, int((5e7 if quick else 2e8) / real))
-        base = None
-        for streams in (1, 2, 4, 8):
-            t = timing.time_fn(lambda: strided_sum(x, streams, passes),
-                               reps=reps, warmup=2,
-                               bytes_per_call=float(real * passes))
-            rel = t.gbps / base if base else 1.0
-            base = base or t.gbps
-            emit(f"fig1/streams{streams}/{real}B", t.mean_s * 1e6,
-                 f"{t.gbps:.2f}GB/s;rel={rel:.3f}")
+    sizes = (32 * 2**10, 1 * 2**20, 32 * 2**20) if quick else \
+        (32 * 2**10, 256 * 2**10, 1 * 2**20, 8 * 2**20, 32 * 2**20,
+         128 * 2**20)
+    base = BenchSpec(mixes=("load_sum",), sizes=sizes,
+                     reps=5 if quick else 10, warmup=2,
+                     target_bytes=5e7 if quick else 2e8)
+
+    res = Runner().run_many(
+        [base.replace(streams=s) for s in STREAM_COUNTS])
+
+    rel = dict(res.baseline_relative(group_key=lambda p: p.nbytes,
+                                     is_baseline=lambda p: p.streams == 1))
+    for p in sorted(res.points, key=lambda p: (p.nbytes, p.streams)):
+        emit(f"fig1/streams{p.streams}/{p.nbytes}B", p.mean_s * 1e6,
+             f"{p.gbps:.2f}GB/s;rel={rel[p]:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,35 +2,39 @@
 
 This *measures the host CPU* (its L1/L2/L3/DRAM) — the same experiment the
 paper runs on A64FX/Altra/ThunderX2, proving the harness end-to-end.  The
-per-level table and the mix-penalty ratios (the paper's FADD 69% / NOP 88% /
-LOAD 99% analysis) are derived by core.analysis.
+script is one BenchSpec declaration; measurement goes through the bench
+Runner, and the per-level table and mix-penalty ratios (the paper's FADD 69% /
+NOP 88% / LOAD 99% analysis) are derived by core.analysis from the
+schema-versioned BenchResult.
 """
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
 from benchmarks.common import emit
-from repro.core import analysis, sweep
+from repro.bench import BenchSpec, Runner
+from repro.core import analysis
 from repro.core.buffers import sizes_logspace
 from repro.core.machine_model import detect_host
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
 
 
-def main(quick: bool = False):
+def spec_for(quick: bool) -> BenchSpec:
     if quick:
-        sizes = [32 * 2**10, 256 * 2**10, 2 * 2**20, 16 * 2**20]
-        mixes = ["load_sum", "copy", "fma_8"]
-        reps, target = 5, 5e7
-    else:
-        sizes = sizes_logspace(16 * 2**10, 128 * 2**20, per_decade=6)
-        mixes = ["load_sum", "copy", "fma_2", "fma_8", "fma_32"]
-        reps, target = 10, 2e8
+        return BenchSpec(
+            mixes=("load_sum", "copy", "fma_8"),
+            sizes=(32 * 2**10, 256 * 2**10, 2 * 2**20, 16 * 2**20),
+            reps=5, warmup=2, target_bytes=5e7)
+    return BenchSpec(
+        mixes=("load_sum", "copy", "fma_2", "fma_8", "fma_32"),
+        sizes=tuple(sizes_logspace(16 * 2**10, 128 * 2**20, per_decade=6)),
+        reps=10, warmup=2, target_bytes=2e8)
 
-    res = sweep.run_sweep(sizes=sizes, mix_names=mixes, reps=reps,
-                          target_bytes=target)
+
+def main(quick: bool = False):
+    res = Runner().run(spec_for(quick))
     host = detect_host()
     model = analysis.build_machine_model(res, host)
 

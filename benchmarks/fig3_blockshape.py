@@ -1,64 +1,51 @@
 """Fig 3 — registers-per-load-instruction (LD1D/LD2D/LD4D) => rows-per-block.
 
 Host analogue: the reduction walks the buffer in blocks of R rows per step; R
-is the LD1/2/4 'registers per instruction' analogue.  The Pallas membench
-kernel sweeps the same knob as a real BlockSpec (core/autotune.py); here the
-host table is *measured* and the Pallas path is verified numerically.
+is the LD1/2/4 'registers per instruction' analogue (the blocked kernel lives
+in core.instruction_mix).  The script declares one BenchSpec per block shape
+(block_rows = C4 knob) for the measured host table, then runs the *same*
+specs through the Pallas backend in interpret mode and verifies the kernels
+against the jnp oracle — one mix registry, two backends.
 """
 from __future__ import annotations
 
 import argparse
-from functools import partial
-
-import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import buffers, timing
-
-
-@partial(jax.jit, static_argnames=("rows", "passes"))
-def blocked_sum(x, rows: int, passes: int):
-    n_blocks = x.shape[0] // rows
-
-    def body(_, carry):
-        x, acc = carry
-
-        def inner(i, a):
-            blk = jax.lax.dynamic_slice_in_dim(x, i * rows, rows, axis=0)
-            return a + jnp.sum(blk, dtype=jnp.float32)
-
-        s = jax.lax.fori_loop(0, n_blocks, inner, jnp.float32(0))
-        eps = (s * 1e-30).astype(x.dtype).reshape(())
-        return (x.at[0, 0].add(eps), acc + s)
-
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
-    return acc
+from repro.bench import BenchSpec, BenchSpecError, Runner
 
 
 def main(quick: bool = False):
     nbytes = 4 * 2**20 if quick else 16 * 2**20
-    x = buffers.working_set(nbytes)
-    real = x.size * x.dtype.itemsize
-    passes = max(1, int((5e7 if quick else 2e8) / real))
-    reps = 5 if quick else 10
     rows_list = (8, 16, 32, 128) if quick else (8, 16, 32, 64, 128, 256, 512)
+    base = BenchSpec(mixes=("load_sum",), sizes=(nbytes,),
+                     reps=5 if quick else 10, warmup=2,
+                     target_bytes=5e7 if quick else 2e8)
+
+    runner = Runner()
     best = (None, 0.0)
     for rows in rows_list:
-        if x.shape[0] % rows:
+        try:
+            res = runner.run(base.replace(block_rows=rows))
+        except BenchSpecError:     # rows not dividing this working set
             continue
-        t = timing.time_fn(lambda: blocked_sum(x, rows, passes), reps=reps,
-                           warmup=2, bytes_per_call=float(real * passes))
-        emit(f"fig3/rows{rows}/{real}B", t.mean_s * 1e6, f"{t.gbps:.2f}GB/s")
-        if t.gbps > best[1]:
-            best = (rows, t.gbps)
+        p = res.points[0]
+        emit(f"fig3/rows{rows}/{p.nbytes}B", p.mean_s * 1e6,
+             f"{p.gbps:.2f}GB/s")
+        if p.gbps > best[1]:
+            best = (rows, p.gbps)
     print(f"# best block rows on this host: {best[0]} ({best[1]:.1f} GB/s)")
 
-    # Pallas path: numerics check via interpret mode (structure, not time)
+    # Pallas path: same spec shape on the pallas backend, numerics vs oracle
+    # (interpret mode validates structure, not time)
     from repro.kernels.membench import ops as mb_ops
     from repro.kernels.membench.ref import reference
+    from repro.core import buffers
+    small = base.replace(sizes=(64 * 2**10,), backend="pallas", passes=1,
+                         reps=2, warmup=1)
     xs = buffers.working_set(64 * 2**10)
     for rows in (8, 32, 128):
+        runner.run(small.replace(block_rows=rows))      # runs through Runner
         out = float(mb_ops.make_kernel("load_sum", block_rows=rows)(xs))
         ref = float(reference("load_sum", xs))
         assert abs(out - ref) < 1e-2, (rows, out, ref)

@@ -4,6 +4,10 @@ MUST run as its own process: forces 8 host devices before jax init.  On TPU
 hardware the same code produces the real per-chip HBM scaling curve (the
 paper's CMG saturation study); on host the 8 'devices' share one socket so the
 curve saturating early IS the expected result (shared-bandwidth NUMA analogue).
+
+The triad kernel is the registry's ``triad`` mix (STREAM comparison on A64FX
+in the paper) declared as a one-size BenchSpec; the multi-device curve stays
+in core.scaling (its own subsystem, pending a sharded backend).
 """
 import os
 if __name__ == "__main__":
@@ -11,24 +15,10 @@ if __name__ == "__main__":
                                + os.environ.get("XLA_FLAGS", ""))
 
 import argparse           # noqa: E402
-from functools import partial  # noqa: E402
-
-import jax                # noqa: E402
-import jax.numpy as jnp   # noqa: E402
 
 from benchmarks.common import emit                       # noqa: E402
-from repro.core import buffers, timing                   # noqa: E402
+from repro.bench import BenchSpec, Runner                # noqa: E402
 from repro.core.scaling import scaling_curve             # noqa: E402
-
-
-@partial(jax.jit, static_argnames=("passes",))
-def stream_triad(a, b, c, passes: int):
-    def body(_, carry):
-        a, acc = carry
-        a = b + 1.5 * c + a * 1e-30          # triad with self-dependence
-        return (a, acc + a[0, 0].astype(jnp.float32))
-    a, acc = jax.lax.fori_loop(0, passes, body, (a, jnp.float32(0)))
-    return acc
 
 
 def main(quick: bool = False):
@@ -40,12 +30,9 @@ def main(quick: bool = False):
              f"{p.gbps:.2f}GB/s;speedup={p.speedup:.2f}x")
 
     # STREAM triad reference (the paper compares against STREAM on A64FX)
-    x = buffers.working_set(per_dev)
-    b, c = x, x * 0.5
-    a = jnp.zeros_like(x)
-    passes = max(1, int(5e7 / (x.size * 4)))
-    t = timing.time_fn(lambda: stream_triad(a, b, c, passes), reps=4,
-                       warmup=2, bytes_per_call=float(3 * x.size * 4 * passes))
+    spec = BenchSpec(mixes=("triad",), sizes=(per_dev,), reps=4, warmup=2,
+                     target_bytes=5e7)
+    t = Runner().run(spec).points[0]
     emit("fig4/stream_triad_1dev", t.mean_s * 1e6, f"{t.gbps:.2f}GB/s")
 
 

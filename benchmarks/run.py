@@ -3,9 +3,12 @@
 ``python -m benchmarks.run``         quick pass of every benchmark
 ``python -m benchmarks.run --full``  full sweep (slower)
 
-Output: ``name,us_per_call,derived`` CSV lines (+ analysis tables).
-fig4 and the collective bench run in subprocesses (they force multi-device
-jax before init); everything else runs in-process.
+Every figure script is a BenchSpec declaration executed by the shared
+``repro.bench`` Runner (``python -m repro.bench`` is the standalone CLI; the
+``bench`` entry here smoke-runs it).  Output: ``name,us_per_call,derived``
+CSV lines (+ analysis tables).  fig4 and the collective bench run in
+subprocesses (they force multi-device jax before init); everything else runs
+in-process.
 """
 from __future__ import annotations
 
@@ -34,7 +37,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig3,fig4,table1,collectives,roofline")
+                    help="comma list: bench,fig1,fig2,fig3,fig4,table1,"
+                         "collectives,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -45,6 +49,12 @@ def main() -> None:
     print("# Arm-membench (TPU port) benchmark suite")
     print("# name,us_per_call,derived")
 
+    if want("bench"):
+        print("\n## bench: unified experiment API smoke (python -m repro.bench)")
+        from repro.bench.cli import main as bench_main
+        (ROOT / "artifacts").mkdir(exist_ok=True)
+        bench_main(["run", "--quick", "--out",
+                    str(ROOT / "artifacts" / "bench_quick.json")])
     if want("fig2"):
         print("\n## fig2/5/6: hierarchy sweep x instruction mix (host measured)")
         from benchmarks import fig2_hierarchy

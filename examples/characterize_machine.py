@@ -11,7 +11,8 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.core import analysis, sweep
+from repro.bench import BenchSpec, Runner
+from repro.core import analysis
 from repro.core.buffers import sizes_logspace
 from repro.core.machine_model import detect_host
 from repro.ft.stragglers import probe_devices
@@ -29,9 +30,10 @@ def main(full: bool = False):
     mixes = (["load_sum", "copy", "fma_1", "fma_2", "fma_8", "fma_32", "fma_64"]
              if full else ["load_sum", "copy", "fma_8", "fma_32"])
     print(f"\nsweeping {len(sizes)} sizes x {len(mixes)} mixes ...")
-    res = sweep.run_sweep(sizes=sizes, mix_names=mixes,
-                          reps=10 if full else 5,
-                          target_bytes=2e8 if full else 5e7)
+    spec = BenchSpec(mixes=tuple(mixes), sizes=tuple(sizes),
+                     reps=10 if full else 5, warmup=2,
+                     target_bytes=2e8 if full else 5e7)
+    res = Runner().run(spec)
     model = analysis.build_machine_model(res, host)
 
     print("\n== per-level bandwidth x instruction mix ==")

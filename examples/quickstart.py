@@ -1,11 +1,16 @@
 """Quickstart: characterize the machine, then train a small LM for 30 steps.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The measurement is one declarative BenchSpec executed by the repro.bench
+Runner — the same API behind ``python -m repro.bench run`` (see
+src/repro/bench/README.md for the knob -> paper mapping).
 """
 import jax
 
+from repro.bench import BenchSpec, Runner
 from repro.configs import get_arch, reduced
-from repro.core import analysis, sweep
+from repro.core import analysis
 from repro.core.machine_model import detect_host
 from repro.launch.mesh import make_mesh
 from repro.optim import adamw
@@ -15,9 +20,10 @@ from repro.train.trainer import TrainConfig, Trainer
 def main():
     # 1. membench: measure this machine's memory hierarchy (the paper's tool)
     print("== membench: hierarchy sweep (quick) ==")
-    res = sweep.run_sweep(sizes=[32 * 2**10, 1 * 2**20, 16 * 2**20],
-                          mix_names=["load_sum", "fma_8"], reps=4,
-                          target_bytes=3e7)
+    spec = BenchSpec(mixes=("load_sum", "fma_8"),
+                     sizes=(32 * 2**10, 1 * 2**20, 16 * 2**20),
+                     reps=4, warmup=2, target_bytes=3e7)
+    res = Runner().run(spec)
     model = analysis.build_machine_model(res, detect_host())
     print(analysis.format_table(model.level_bw, model.mix_penalty))
 

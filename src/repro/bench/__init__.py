@@ -1,0 +1,43 @@
+"""repro.bench — the unified experiment API (see README.md in this package).
+
+One declarative BenchSpec, pluggable backends (xla oracles / pallas TPU
+kernels), one Runner owning the measurement discipline, versioned results:
+
+    from repro.bench import BenchSpec, Runner
+    res = Runner().run(BenchSpec(mixes=("load_sum", "fma_8"),
+                                 sizes=(32 * 2**10, 16 * 2**20)))
+    res.to_json("sweep.json")
+
+CLI: ``python -m repro.bench {run,list-mixes,compare}``.
+
+Heavy submodules (backends pull in the kernel packages) load lazily so that
+``repro.core`` modules can import the mix registry without a cycle.
+"""
+from repro.bench.mixes import FMA_DEPTHS, MixDef, get_mix, mix_names, registry  # noqa: F401
+from repro.bench.result import (BenchPoint, BenchResult,  # noqa: F401
+                                SCHEMA_VERSION, machine_meta)
+from repro.bench.spec import (BenchSpec, BenchSpecError,  # noqa: F401
+                              SPEC_VERSION, quick_spec)
+
+_LAZY = {
+    "Runner": ("repro.bench.runner", "Runner"),
+    "run": ("repro.bench.runner", "run"),
+    "pick_passes": ("repro.bench.runner", "pick_passes"),
+    "Backend": ("repro.bench.backends", "Backend"),
+    "get_backend": ("repro.bench.backends", "get_backend"),
+    "register_backend": ("repro.bench.backends", "register_backend"),
+    "available_backends": ("repro.bench.backends", "available_backends"),
+}
+
+__all__ = ["BenchSpec", "BenchSpecError", "BenchPoint", "BenchResult",
+           "MixDef", "FMA_DEPTHS", "SCHEMA_VERSION", "SPEC_VERSION",
+           "registry", "get_mix", "mix_names", "machine_meta", "quick_spec",
+           *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module 'repro.bench' has no attribute {name!r}")

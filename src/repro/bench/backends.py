@@ -1,0 +1,144 @@
+"""Pluggable benchmark backends: the XLA oracles and the Pallas embodiment.
+
+A Backend turns (BenchSpec, mix, working set, passes) into a zero-arg callable
+whose return value is the serialization point for timing.  Work accounting is
+NOT a backend concern — the Runner reads it from the shared mix registry, so
+the two backends report identical bytes/flops for the same spec by
+construction.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.bench.mixes import MixDef, get_mix
+from repro.bench.spec import BenchSpec, BenchSpecError
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """One way of executing a mix on a device."""
+    name: str
+
+    def supports(self, mix: MixDef) -> bool:
+        """Can this backend run the mix at all (knobs aside)?"""
+        ...
+
+    def validate(self, spec: BenchSpec) -> None:
+        """Raise BenchSpecError for knob combinations this backend can't run."""
+        ...
+
+    def build(self, spec: BenchSpec, mix: MixDef, x, passes: int
+              ) -> Callable[[], object]:
+        """Zero-arg callable running `passes` passes of `mix` over `x`; the
+        returned jax array is the block_until_ready serialization point."""
+        ...
+
+
+class XLABackend:
+    """The jnp oracles from core.instruction_mix (host-measurable)."""
+    name = "xla"
+
+    def supports(self, mix: MixDef) -> bool:
+        return self.name in mix.backends
+
+    def validate(self, spec: BenchSpec) -> None:
+        for m in spec.mixes:
+            mix = get_mix(m)
+            if not self.supports(mix):
+                raise BenchSpecError(f"mix {m!r} not supported on xla")
+            if spec.streams > 1 and m != "load_sum":
+                raise BenchSpecError(
+                    "xla backend expresses streams>1 only for load_sum "
+                    f"(the strided-walk oracle); got mix {m!r}")
+            if spec.block_rows is not None and m != "load_sum":
+                raise BenchSpecError(
+                    "xla backend expresses block_rows only for load_sum "
+                    f"(the blocked-walk oracle); got mix {m!r}")
+        if spec.streams > 1 and spec.block_rows is not None:
+            raise BenchSpecError("xla backend: streams and block_rows are "
+                                 "mutually exclusive knobs")
+
+    def build(self, spec, mix, x, passes):
+        from repro.core import instruction_mix as im
+        if mix.name == "load_sum" and spec.streams > 1:
+            streams = spec.streams
+            return lambda: im.k_strided_sum(x, streams, passes)
+        if mix.name == "load_sum" and spec.block_rows is not None:
+            rows = spec.block_rows
+            if x.shape[0] % rows:
+                raise BenchSpecError(
+                    f"block_rows {rows} does not divide {x.shape[0]} rows")
+            return lambda: im.k_blocked_sum(x, rows, passes)
+        if mix.name == "triad":
+            b, c = x, x * 0.5
+            a = jnp.zeros_like(x)
+            return lambda: im.k_triad(a, b, c, passes)
+        return lambda: im.run_mix(mix.name, x, passes)
+
+
+class PallasBackend:
+    """The Pallas TPU kernels (kernels/membench) with explicit VMEM tiling.
+
+    interpret=True validates kernel-body semantics on CPU; on real TPU set
+    BenchSpec(interpret=False) for wall-clock-meaningful numbers.
+    """
+    name = "pallas"
+    DEFAULT_BLOCK_ROWS = 128
+
+    def supports(self, mix: MixDef) -> bool:
+        return self.name in mix.backends
+
+    def _resolve(self, spec: BenchSpec, x) -> int:
+        if spec.block_rows is not None:
+            return spec.block_rows       # explicit knob: never adjusted
+        return min(self.DEFAULT_BLOCK_ROWS, x.shape[0])
+
+    def validate(self, spec: BenchSpec) -> None:
+        for m in spec.mixes:
+            if not self.supports(get_mix(m)):
+                raise BenchSpecError(f"mix {m!r} not supported on pallas")
+
+    def build(self, spec, mix, x, passes):
+        from repro.kernels.membench import ops as mb_ops
+        rows = self._resolve(spec, x)
+        if rows > x.shape[0] or x.shape[0] % rows:
+            raise BenchSpecError(
+                f"block_rows {rows} does not divide {x.shape[0]} rows")
+        n_blocks = x.shape[0] // rows
+        if n_blocks % spec.streams:
+            raise BenchSpecError(
+                f"streams {spec.streams} does not divide {n_blocks} blocks")
+        fn = mb_ops.make_timed_kernel(
+            mix.name, depth=mix.fma_depth or 8, block_rows=rows,
+            streams=spec.streams, interpret=spec.interpret, passes=passes)
+        if mix.name == "triad":
+            y = x * 0.5
+            return lambda: fn(x, y)
+        return lambda: fn(x)
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+register_backend(XLABackend())
+register_backend(PallasBackend())
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)

@@ -1,0 +1,160 @@
+"""``python -m repro.bench`` — run / list-mixes / compare.
+
+    run         execute a BenchSpec (flags or --spec JSON), print + save the
+                schema-versioned result JSON
+    list-mixes  the shared mix registry with its bytes/flops accounting
+    compare     the same spec on several backends, side by side
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.bench.mixes import registry
+from repro.bench.runner import Runner
+from repro.bench.spec import BenchSpec, BenchSpecError, quick_spec
+
+
+def _parse_sizes(s: str) -> tuple[int, ...]:
+    """'32768,1M,16M' -> bytes (supports K/M/G suffixes)."""
+    out = []
+    for tok in s.split(","):
+        tok = tok.strip()
+        mult = {"K": 2**10, "M": 2**20, "G": 2**30}.get(tok[-1:].upper(), 1)
+        out.append(int(float(tok[:-1]) * mult) if mult != 1 else int(tok))
+    return tuple(out)
+
+
+def _spec_from_args(args) -> BenchSpec:
+    if args.spec:
+        return BenchSpec.from_json(args.spec)
+    kw = {}
+    if args.mixes is not None:
+        kw["mixes"] = tuple(args.mixes.split(","))
+    if args.sizes is not None:
+        kw["sizes"] = _parse_sizes(args.sizes)
+    # `is not None`: an explicit 0 must reach BenchSpec validation, not be
+    # silently treated as "flag absent"
+    if args.reps is not None:
+        kw["reps"] = args.reps
+    if args.streams is not None:
+        kw["streams"] = args.streams
+    if args.block_rows is not None:
+        kw["block_rows"] = args.block_rows
+    if args.dtype is not None:
+        kw["dtype"] = args.dtype
+    if args.quick:
+        return quick_spec(backend=args.backend, **kw)
+    return BenchSpec(backend=args.backend, **kw)
+
+
+def _add_spec_flags(p: argparse.ArgumentParser):
+    p.add_argument("--spec", default=None,
+                   help="path to a BenchSpec JSON (overrides other flags)")
+    p.add_argument("--quick", action="store_true",
+                   help="small sizes / few reps smoke preset")
+    p.add_argument("--backend", default="xla", help="xla | pallas")
+    p.add_argument("--mixes", default=None, help="comma list, e.g. load_sum,copy")
+    p.add_argument("--sizes", default=None, help="comma list, K/M/G ok: 32K,2M")
+    p.add_argument("--reps", type=int, default=None)
+    p.add_argument("--streams", type=int, default=None)
+    p.add_argument("--block-rows", dest="block_rows", type=int, default=None)
+    p.add_argument("--dtype", default=None)
+
+
+def cmd_run(args) -> int:
+    spec = _spec_from_args(args)
+    res = Runner().run(spec)
+    text = res.to_json(args.out)
+    if args.out:
+        for p in res.points:
+            print(f"{p.backend}/{p.mix}/{p.nbytes}B,{p.mean_s * 1e6:.2f},"
+                  f"{p.gbps:.2f}GB/s")
+        print(f"# saved {len(res.points)} points (schema v{res.schema_version})"
+              f" -> {args.out}")
+    else:
+        print(text)
+    return 0
+
+
+def cmd_list_mixes(args) -> int:
+    print(f"{'mix':10s} {'flops/elem':>10s} {'reads':>6s} {'writes':>6s}  "
+          f"{'backends':16s} description")
+    for name, m in sorted(registry().items()):
+        print(f"{name:10s} {m.flops_per_elem:10.1f} {m.reads_per_elem:6.1f} "
+              f"{m.writes_per_elem:6.1f}  {'+'.join(m.backends):16s} "
+              f"{m.description}")
+    return 0
+
+
+def cmd_compare(args) -> int:
+    backends = tuple(args.backends.split(","))
+    if args.spec:
+        spec = BenchSpec.from_json(args.spec)
+    else:
+        # the requested mix set may be runnable by only some of the backends
+        # (e.g. load_only): construct the base spec against the first backend
+        # that accepts it in full; Runner.compare filters per backend
+        spec, err = None, None
+        for b in backends:
+            args.backend = b
+            try:
+                spec = _spec_from_args(args)
+                break
+            except BenchSpecError as e:
+                err = e
+        if spec is None:
+            raise err or BenchSpecError("no runnable spec")
+    results = Runner().compare(spec, backends=backends)
+    print(f"{'mix':10s} {'nbytes':>12s} " +
+          " ".join(f"{b + ' GB/s':>14s}" for b in results))
+    rows: dict[tuple, dict] = {}
+    for b, res in results.items():
+        for p in res.points:
+            rows.setdefault((p.mix, p.nbytes), {})[b] = p
+    mismatch = False
+    for (mix, nbytes), per in sorted(rows.items()):
+        cells = [f"{per[b].gbps:14.2f}" if b in per else f"{'-':>14s}"
+                 for b in results]
+        print(f"{mix:10s} {nbytes:12d} " + " ".join(cells))
+        acct = {(p.bytes_per_call, p.flops_per_call) for p in per.values()}
+        if len(acct) > 1:
+            mismatch = True
+            print(f"  !! accounting mismatch for {mix}: {acct}")
+    if args.out:
+        json.dump({b: r.to_dict() for b, r in results.items()},
+                  open(args.out, "w"), indent=2)
+        print(f"# saved -> {args.out}")
+    return 1 if mismatch else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_run = sub.add_parser("run", help="execute a BenchSpec")
+    _add_spec_flags(p_run)
+    p_run.add_argument("--out", default=None, help="write result JSON here")
+    p_run.set_defaults(fn=cmd_run)
+
+    p_list = sub.add_parser("list-mixes", help="show the mix registry")
+    p_list.set_defaults(fn=cmd_list_mixes)
+
+    p_cmp = sub.add_parser("compare", help="same spec on several backends")
+    _add_spec_flags(p_cmp)
+    p_cmp.add_argument("--backends", default="xla,pallas")
+    p_cmp.add_argument("--out", default=None)
+    p_cmp.set_defaults(fn=cmd_compare)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (BenchSpecError, ValueError, KeyError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

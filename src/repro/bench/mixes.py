@@ -1,0 +1,104 @@
+"""The instruction-mix registry — C2 of the paper, declared exactly once.
+
+Arm-membench's central idea is that the *same* data stream measured under
+different instruction mixes (LOAD-only / LOAD+FADD / LOAD+NOP) attributes the
+bottleneck.  Every mix the repo can run — through the XLA oracles *or* the
+Pallas TPU embodiment — is declared here, with its own bytes/flops accounting,
+so the two backends can never disagree about what a measurement means.
+
+    mix            ops/element     Armv8 analogue
+    ``load_only``  0               pure LD1D loop (Pallas-only: XLA DCE's a
+                                   dead load, the Pallas pipeline DMAs the
+                                   block into VMEM regardless)
+    ``load_sum``   1 add           the FADD accumulation loop
+    ``copy``       1 store         STREAM-copy (write path exercised)
+    ``triad``      2 flops         STREAM-triad a = b + s*c (2 reads, 1 write)
+    ``fma_k``      2k flops        NOP-substitution ladder: k-deep dependent
+                                   FMA chain; the knee is the measured ridge
+    ``mxu``        2*128 flops     one 128x128 matmul per tile (MXU saturation)
+
+Consumers: ``repro.bench.backends`` (kernel dispatch), ``repro.bench.runner``
+(work accounting), ``repro.core.instruction_mix`` (legacy ``mixes()`` view),
+``repro.kernels.membench.ops.work_per_call`` (legacy accounting view).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+FMA_DEPTHS = (1, 2, 4, 8, 16, 32, 64)
+
+
+@dataclass(frozen=True)
+class MixDef:
+    """One instruction mix: name + per-element work accounting + backends."""
+    name: str
+    flops_per_elem: float          # arithmetic per element per pass
+    reads_per_elem: float = 1.0
+    writes_per_elem: float = 0.0
+    backends: tuple[str, ...] = ("xla", "pallas")
+    fma_depth: int = 0             # chain depth for the fma family
+    description: str = ""
+
+    def bytes_per_pass(self, nbytes: int) -> float:
+        return (self.reads_per_elem + self.writes_per_elem) * nbytes
+
+    def flops_per_pass(self, n_elems: int) -> float:
+        return self.flops_per_elem * n_elems
+
+    def supports(self, backend: str) -> bool:
+        return backend in self.backends
+
+
+def _build_registry() -> dict[str, MixDef]:
+    out = {
+        "load_only": MixDef(
+            "load_only", 0.0, backends=("pallas",),
+            description="pure data movement; one lane feeds the accumulator"),
+        "load_sum": MixDef(
+            "load_sum", 1.0,
+            description="load + accumulate (the FADD loop)"),
+        "copy": MixDef(
+            "copy", 0.0, reads_per_elem=1.0, writes_per_elem=1.0,
+            description="STREAM copy: read stream + write stream"),
+        "triad": MixDef(
+            "triad", 2.0, reads_per_elem=2.0, writes_per_elem=1.0,
+            description="STREAM triad a = b + s*c"),
+        "mxu": MixDef(
+            "mxu", 2.0 * 128.0,
+            description="one (rows,128)@(128,128) matmul per tile"),
+    }
+    for k in FMA_DEPTHS:
+        out[f"fma_{k}"] = MixDef(
+            f"fma_{k}", 2.0 * k, fma_depth=k,
+            description=f"{k}-deep dependent FMA chain per element")
+    return out
+
+
+_REGISTRY: dict[str, MixDef] = _build_registry()
+
+
+def registry() -> dict[str, MixDef]:
+    """name -> MixDef for every known mix (shared, do not mutate)."""
+    return dict(_REGISTRY)
+
+
+def get_mix(name: str) -> MixDef:
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name.startswith("fma_"):
+        # the fma family is open-ended: any positive chain depth is a valid
+        # mix (registry() lists only the canonical ladder)
+        try:
+            k = int(name.split("_", 1)[1])
+        except ValueError:
+            k = 0
+        if k >= 1:
+            return MixDef(name, 2.0 * k, fma_depth=k,
+                          description=f"{k}-deep dependent FMA chain per element")
+    raise KeyError(f"unknown mix {name!r}; known: {sorted(_REGISTRY)}")
+
+
+def mix_names(backend: str | None = None) -> list[str]:
+    """All mix names, optionally only those a given backend supports."""
+    return [m.name for m in _REGISTRY.values()
+            if backend is None or m.supports(backend)]

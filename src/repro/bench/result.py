@@ -1,0 +1,117 @@
+"""Versioned result schema: BenchPoint / BenchResult.
+
+Supersedes ``core.sweep.SweepPoint``: every point carries its backend, the
+addressing knobs it was measured under, and explicit bytes/flops accounting
+(from the shared mix registry), so results from different backends/machines
+are directly comparable.  The envelope carries ``schema_version``, the spec
+that produced it, and machine metadata — a result file is a reproducible
+record, not just numbers.
+"""
+from __future__ import annotations
+
+import json
+import platform
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class BenchPoint:
+    nbytes: int                 # real working-set bytes
+    mix: str
+    dtype: str
+    backend: str
+    passes: int
+    streams: int
+    block_rows: int | None
+    reps: int
+    bytes_per_call: float       # registry accounting x passes
+    flops_per_call: float
+    mean_s: float
+    std_s: float
+    min_s: float
+    gbps: float
+    gflops: float
+
+
+@dataclass
+class BenchResult:
+    points: list[BenchPoint] = field(default_factory=list)
+    spec: dict = field(default_factory=dict)       # BenchSpec.to_dict()
+    machine: dict = field(default_factory=dict)    # machine_meta()
+    meta: dict = field(default_factory=dict)       # run-level extras (dtype..)
+    schema_version: int = SCHEMA_VERSION
+
+    # -- queries ------------------------------------------------------------
+    def by_mix(self, mix: str) -> list[BenchPoint]:
+        return [p for p in self.points if p.mix == mix]
+
+    def by_size(self, nbytes: int) -> list[BenchPoint]:
+        return [p for p in self.points if p.nbytes == nbytes]
+
+    def baseline_relative(self, group_key=None, is_baseline=None
+                          ) -> list[tuple[BenchPoint, float]]:
+        """Each point's throughput relative to its group's baseline point.
+
+        The baseline is the *first* point in each group satisfying
+        ``is_baseline`` (default: the first point seen).  Anchoring uses an
+        explicit presence check — a measured 0.0 GB/s baseline stays the
+        baseline instead of silently re-anchoring on the next point (the
+        ``base = base or gbps`` truthiness bug this replaces).
+        """
+        group_key = group_key or (lambda p: p.nbytes)
+        bases: dict = {}
+        for p in self.points:
+            g = group_key(p)
+            if g not in bases and (is_baseline is None or is_baseline(p)):
+                bases[g] = p.gbps
+        out = []
+        for p in self.points:
+            base = bases.get(group_key(p))
+            rel = p.gbps / base if base else float("nan")
+            out.append((p, rel))
+        return out
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"schema_version": self.schema_version,
+                "spec": self.spec, "machine": self.machine, "meta": self.meta,
+                "points": [asdict(p) for p in self.points]}
+
+    def to_json(self, path: str | Path | None = None) -> str:
+        s = json.dumps(self.to_dict(), indent=2)
+        if path is not None:
+            Path(path).write_text(s)
+        return s
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchResult":
+        ver = d.get("schema_version", 0)
+        if ver > SCHEMA_VERSION:
+            raise ValueError(
+                f"result schema_version {ver} newer than supported "
+                f"{SCHEMA_VERSION}")
+        return cls(points=[BenchPoint(**p) for p in d.get("points", [])],
+                   spec=d.get("spec", {}), machine=d.get("machine", {}),
+                   meta=d.get("meta", {}),
+                   schema_version=ver or SCHEMA_VERSION)
+
+    @classmethod
+    def from_json(cls, path: str | Path) -> "BenchResult":
+        return cls.from_dict(json.loads(Path(path).read_text()))
+
+
+def machine_meta() -> dict:
+    """Best-effort machine identity stamped into every result."""
+    import jax
+    dev = jax.devices()[0]
+    return {"hostname": platform.node(),
+            "arch": platform.machine(),
+            "system": platform.system(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "device_platform": dev.platform,
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "device_count": jax.device_count()}

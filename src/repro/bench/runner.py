@@ -1,0 +1,136 @@
+"""The Runner — pass-picking, warmup, serialized timing, result assembly.
+
+This is the ONE measurement loop in the repo.  The figure scripts, the legacy
+``core.sweep`` wrapper, the autotuner, and the CLI all hand it a BenchSpec;
+it owns the repetition discipline (warmup + reps via ``core.timing``), the
+pass-picking policy (enough internal passes that one timed call moves
+``target_bytes`` — the paper's measurement-loop sizing), and emits a
+schema-versioned BenchResult.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.bench.backends import get_backend
+from repro.bench.result import BenchPoint, BenchResult, machine_meta
+from repro.bench.spec import BenchSpec, BenchSpecError
+
+
+def pick_passes(nbytes: int, target_bytes: float = 2e8) -> int:
+    """Enough passes that one timed call moves ~target_bytes (>= ms-scale)."""
+    return max(1, int(target_bytes / max(nbytes, 1)))
+
+
+class Runner:
+    """Executes BenchSpecs.  Stateless apart from the backend registry (and a
+    buffer cache scoped to a run_many call)."""
+
+    def __init__(self):
+        self._buffers: dict | None = None   # (nbytes, dtype, value) -> array
+
+    def _working_set(self, spec: BenchSpec, nbytes: int):
+        from repro.core import buffers
+        key = (nbytes, spec.dtype, spec.value)
+        if self._buffers is not None and key in self._buffers:
+            return self._buffers[key]
+        x = buffers.working_set(nbytes, dtype=jnp.dtype(spec.dtype),
+                                value=spec.value)
+        if self._buffers is not None:
+            self._buffers[key] = x
+        return x
+
+    def run(self, spec: BenchSpec, extra_meta: dict | None = None
+            ) -> BenchResult:
+        from repro.core import timing
+        backend = get_backend(spec.backend)
+        backend.validate(spec)
+        from repro.bench.mixes import get_mix
+
+        # build every case first: a data-dependent knob error (block_rows /
+        # streams not dividing some size) surfaces before any timing is spent
+        cases = []
+        for nbytes in spec.sizes:
+            x = self._working_set(spec, nbytes)
+            real_bytes = x.size * x.dtype.itemsize
+            passes = spec.passes or pick_passes(real_bytes, spec.target_bytes)
+            for name in spec.mixes:
+                mix = get_mix(name)
+                fn = backend.build(spec, mix, x, passes)
+                bpc = mix.bytes_per_pass(real_bytes) * passes
+                fpc = mix.flops_per_pass(x.size) * passes
+                cases.append((real_bytes, x, name, passes, fn, bpc, fpc))
+
+        res = BenchResult(
+            spec=spec.to_dict(), machine=machine_meta(),
+            meta={"dtype": spec.dtype, "reps": spec.reps,
+                  "sizes": list(spec.sizes), "mixes": list(spec.mixes),
+                  **(extra_meta or {})})
+        for real_bytes, x, name, passes, fn, bpc, fpc in cases:
+            t = timing.time_fn(fn, reps=spec.reps, warmup=spec.warmup,
+                               bytes_per_call=bpc, flops_per_call=fpc)
+            res.points.append(BenchPoint(
+                nbytes=real_bytes, mix=name, dtype=spec.dtype,
+                backend=spec.backend, passes=passes, streams=spec.streams,
+                block_rows=spec.block_rows, reps=spec.reps,
+                bytes_per_call=bpc, flops_per_call=fpc,
+                mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
+                gbps=t.gbps, gflops=t.gflops))
+        return res
+
+    def run_many(self, specs, extra_meta: dict | None = None) -> BenchResult:
+        """Run several specs into one result (e.g. a streams or block_rows
+        sweep, where the knob lives on the spec rather than the point list).
+        With more than one distinct spec the envelope records all of them
+        (``spec["many"]``); each point carries its own knobs regardless.
+        Working-set buffers are shared across the specs, so sweeping a knob
+        does not re-initialize every buffer per knob value."""
+        fresh = self._buffers is None
+        if fresh:
+            self._buffers = {}
+        try:
+            results = [self.run(s, extra_meta=extra_meta) for s in specs]
+        finally:
+            if fresh:
+                self._buffers = None
+        if not results:
+            raise ValueError("run_many needs at least one spec")
+        merged = results[0]
+        for r in results[1:]:
+            merged.points.extend(r.points)
+        spec_dicts = [r.spec for r in results]
+        if any(d != spec_dicts[0] for d in spec_dicts[1:]):
+            merged.spec = {"spec_version": spec_dicts[0]["spec_version"],
+                           "many": spec_dicts}
+        return merged
+
+    def compare(self, spec: BenchSpec, backends=("xla", "pallas")
+                ) -> dict[str, BenchResult]:
+        """The same spec on several backends — the paper's
+        oracle-vs-embodiment cross-check.  Mixes are filtered per backend by
+        *full* validation (support set and knob combinations), so e.g.
+        ``streams=4`` keeps load_sum on xla and drops copy rather than
+        aborting the whole comparison."""
+        out = {}
+        for b in backends:
+            names = []
+            for m in spec.mixes:
+                try:
+                    sub = spec.replace(backend=b, mixes=(m,))
+                    get_backend(b).validate(sub)
+                except (BenchSpecError, KeyError):
+                    continue
+                names.append(m)
+            if not names:
+                continue
+            try:
+                out[b] = self.run(spec.replace(backend=b, mixes=tuple(names)))
+            except BenchSpecError:
+                # data-dependent constraint (e.g. streams vs. block count for
+                # this buffer): this backend can't run the spec — skip it
+                continue
+        return out
+
+
+def run(spec: BenchSpec, **kw) -> BenchResult:
+    """Module-level convenience: ``repro.bench.run(spec)``."""
+    return Runner().run(spec, **kw)

@@ -1,0 +1,146 @@
+"""BenchSpec — one benchmark point-set as a frozen, serializable declaration.
+
+The paper treats every measurement as the product of (instruction mix x
+working-set size x access pattern x repetition discipline).  A BenchSpec *is*
+that product: a validated, hashable, JSON-round-trippable configuration that
+the Runner executes on any registered backend.  Knob -> paper mapping:
+
+    sizes        C1  working-set sweep across the memory hierarchy
+    mixes        C2  instruction-mix ladder (see repro.bench.mixes)
+    streams      C3  interleaved address streams (addressing-mode overhead)
+    block_rows   C4  rows per load step (LD1D/LD2D/LD4D analogue)
+    reps/warmup/passes   the serialized-timing repetition discipline (§4/§5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.bench import mixes as mixreg
+
+SPEC_VERSION = 1
+
+
+class BenchSpecError(ValueError):
+    """Invalid BenchSpec field or unsupported knob/backend combination."""
+
+
+@dataclass(frozen=True)
+class BenchSpec:
+    """Declarative benchmark configuration (frozen; use ``.replace()``)."""
+    mixes: tuple[str, ...] = ("load_sum",)
+    sizes: tuple[int, ...] = (32 * 2**10, 1 * 2**20, 16 * 2**20)
+    dtype: str = "float32"
+    backend: str = "xla"
+    block_rows: int | None = None     # None = backend default tiling
+    streams: int = 1
+    passes: int | None = None         # None = auto from target_bytes
+    target_bytes: float = 2e8         # auto pass-picking: bytes per timed call
+    reps: int = 10
+    warmup: int = 2
+    value: float = 1.234567           # buffer init value (denormal-avoiding)
+    interpret: bool = True            # Pallas interpret mode (False on TPU)
+    tags: tuple[str, ...] = ()        # free-form labels carried into results
+
+    # -- validation ---------------------------------------------------------
+    def __post_init__(self):
+        # coerce lists (e.g. from JSON) to tuples so the spec stays hashable
+        for f in ("mixes", "sizes", "tags"):
+            v = getattr(self, f)
+            if isinstance(v, list):
+                object.__setattr__(self, f, tuple(v))
+        self.validate()
+
+    def validate(self) -> None:
+        # late import: backends.py imports this module for BenchSpecError
+        from repro.bench.backends import get_backend
+        try:
+            backend = get_backend(self.backend)
+        except KeyError as e:
+            raise BenchSpecError(str(e)) from None
+        if not self.mixes:
+            raise BenchSpecError("spec needs at least one mix")
+        for m in self.mixes:
+            try:
+                mix = mixreg.get_mix(m)
+            except KeyError as e:
+                raise BenchSpecError(str(e)) from None
+            if not backend.supports(mix):
+                raise BenchSpecError(
+                    f"mix {m!r} is not supported by backend "
+                    f"{self.backend!r} (declared: {mix.backends})")
+        if not self.sizes or any(int(s) <= 0 for s in self.sizes):
+            raise BenchSpecError(f"sizes must be positive ints: {self.sizes}")
+        if self.streams < 1:
+            raise BenchSpecError(f"streams must be >= 1: {self.streams}")
+        if self.block_rows is not None and (
+                self.block_rows < 1 or self.block_rows % 8):
+            raise BenchSpecError(
+                f"block_rows must be a positive multiple of 8 (the f32 "
+                f"sublane tile): {self.block_rows}")
+        if self.passes is not None and self.passes < 1:
+            raise BenchSpecError(f"passes must be >= 1: {self.passes}")
+        if self.reps < 1 or self.warmup < 0:
+            raise BenchSpecError(
+                f"need reps >= 1, warmup >= 0: {self.reps}, {self.warmup}")
+        if self.target_bytes <= 0:
+            raise BenchSpecError(f"target_bytes must be > 0: {self.target_bytes}")
+        import jax.numpy as jnp
+        try:
+            jnp.dtype(self.dtype)
+        except TypeError as e:
+            raise BenchSpecError(f"bad dtype {self.dtype!r}: {e}") from None
+
+    # -- convenience --------------------------------------------------------
+    def replace(self, **kw) -> "BenchSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for f in ("mixes", "sizes", "tags"):   # JSON-canonical (round-trips)
+            d[f] = list(d[f])
+        d["spec_version"] = SPEC_VERSION
+        return d
+
+    def to_json(self, path: str | Path | None = None) -> str:
+        s = json.dumps(self.to_dict(), indent=2, sort_keys=True)
+        if path is not None:
+            Path(path).write_text(s)
+        return s
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchSpec":
+        d = dict(d)
+        ver = d.pop("spec_version", SPEC_VERSION)
+        if ver > SPEC_VERSION:
+            raise BenchSpecError(
+                f"spec_version {ver} is newer than supported {SPEC_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise BenchSpecError(f"unknown spec fields: {sorted(unknown)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, src: str | Path) -> "BenchSpec":
+        """Accepts a Path, a path string, or an inline JSON object string
+        (anything starting with '{'); a mistyped path raises
+        FileNotFoundError rather than a JSON parse error."""
+        if isinstance(src, Path):
+            text = src.read_text()
+        else:
+            s = str(src)
+            text = s if s.lstrip().startswith("{") else Path(s).read_text()
+        return cls.from_dict(json.loads(text))
+
+
+def quick_spec(backend: str = "xla", **kw) -> BenchSpec:
+    """The --quick preset: small sizes, few reps, light pass target."""
+    base = dict(mixes=("load_sum", "copy", "fma_8"),
+                sizes=(32 * 2**10, 256 * 2**10, 2 * 2**20),
+                reps=3, warmup=1, target_bytes=2e7, backend=backend)
+    base.update(kw)
+    return BenchSpec(**base)

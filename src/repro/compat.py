@@ -1,0 +1,74 @@
+"""Forward-compatibility layer: run code written for jax >= 0.6 on jax 0.4.x.
+
+The repo targets the modern sharding API (``jax.set_mesh``, ``jax.shard_map``
+with ``check_vma``, ``jax.sharding.AxisType``); the pinned container toolchain
+ships jax 0.4.37, which predates all three.  ``install()`` adds the missing
+names to the ``jax`` module, delegating to their 0.4.x equivalents:
+
+    jax.set_mesh(mesh)    -> ``with mesh:`` (Mesh has been a context manager
+                             since the pjit era; entering it is the 0.4.x way
+                             of establishing the ambient mesh)
+    jax.shard_map(...)    -> jax.experimental.shard_map.shard_map, with
+                             ``check_vma`` translated to ``check_rep``
+    jax.sharding.AxisType -> a stub enum (0.4.x meshes have no axis types;
+                             every axis behaves as Auto)
+    jax.make_mesh(...)    -> the 0.4.x factory with an ``axis_types`` kwarg
+                             accepted and dropped
+
+Only ever *adds* attributes — on a modern jax this module is a no-op, so the
+same source runs unchanged on both sides of the API break.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+
+
+class _AxisTypeStub(enum.Enum):
+    """Placeholder for jax.sharding.AxisType on 0.4.x (everything is Auto)."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    from jax.experimental.shard_map import shard_map
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+
+
+@contextlib.contextmanager
+def _set_mesh_compat(mesh):
+    with mesh:
+        yield mesh
+
+
+def _wrap_make_mesh() -> None:
+    import inspect
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        return orig(axis_shapes, axis_names, **kw)
+
+    make_mesh._compat_orig = orig
+    jax.make_mesh = make_mesh
+
+
+def install() -> None:
+    """Idempotently add missing jax >= 0.6 names to the jax module."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh_compat
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeStub
+    _wrap_make_mesh()
+
+
+install()

@@ -9,12 +9,17 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from typing import Union
 
 import numpy as np
 
+from repro.bench.result import BenchResult
 from repro.core.machine_model import HardwareSpec, MachineModel
 from repro.core.sweep import SweepResult
+
+#: Both result schemas expose .points (.mix/.nbytes/.gbps), .by_mix and .meta;
+#: BenchResult is the versioned schema, SweepResult the legacy one.
+Result = Union[BenchResult, SweepResult]
 
 
 def level_band(level_size: int | None, prev_size: int) -> tuple[float, float]:
@@ -25,7 +30,7 @@ def level_band(level_size: int | None, prev_size: int) -> tuple[float, float]:
     return lo, hi
 
 
-def attribute_levels(res: SweepResult, hw: HardwareSpec) -> dict:
+def attribute_levels(res: Result, hw: HardwareSpec) -> dict:
     """level -> {mix: mean GB/s within the level's band}."""
     out: dict[str, dict] = {}
     prev = 4 * 2**10 // 2
@@ -53,7 +58,7 @@ def mix_penalties(level_bw: dict) -> dict:
     return out
 
 
-def ridge_depth(res: SweepResult, band: tuple[float, float],
+def ridge_depth(res: Result, band: tuple[float, float],
                 threshold: float = 0.9) -> int | None:
     """Smallest fma-chain depth whose throughput < threshold x load_sum —
     the measured compute/bandwidth crossover inside the given size band."""
@@ -75,7 +80,7 @@ def ridge_depth(res: SweepResult, band: tuple[float, float],
     return None
 
 
-def build_machine_model(res: SweepResult, hw: HardwareSpec) -> MachineModel:
+def build_machine_model(res: Result, hw: HardwareSpec) -> MachineModel:
     level_bw = attribute_levels(res, hw)
     pen = mix_penalties(level_bw)
     # ridge measured in the innermost level band (cache-resident)

@@ -9,12 +9,10 @@ hard-coding tiles.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass
+from dataclasses import dataclass
 from pathlib import Path
 
 import jax.numpy as jnp
-
-from repro.core import buffers, timing
 
 
 # candidate block shapes: (sublane-multiple rows, 128 lanes) — v5e native tile
@@ -33,24 +31,27 @@ class TuneResult:
 
 def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
                        reps: int = 8, interpret: bool = True) -> TuneResult:
-    """Run the *Pallas* membench kernel across block shapes.
+    """Run the *Pallas* membench kernels across block shapes via the bench
+    Runner (one BenchSpec per candidate row count; C4 of the paper).
 
     interpret=True on CPU (kernel-body semantics validated); on real TPU pass
     interpret=False for wall-clock-meaningful numbers.
     """
-    from repro.kernels.membench import ops as mb_ops
+    from repro.bench import BenchSpec, Runner
+    from repro.core import buffers
+    dtype_s = str(jnp.dtype(dtype))
+    rows_total = buffers.working_set(nbytes, dtype=dtype).shape[0]
+    runner = Runner()
     table = {}
-    x = buffers.working_set(nbytes, dtype=dtype)
-    rows_total = x.shape[0]
     for rows in CANDIDATE_ROWS:
-        if rows > rows_total:
+        if rows > rows_total or rows_total % rows:
             continue
-        fn = mb_ops.make_kernel(mix=mix, block_rows=rows, interpret=interpret)
-        t = timing.time_fn(fn, x, reps=reps, warmup=1,
-                           bytes_per_call=float(x.size * x.dtype.itemsize))
-        table[rows] = t.gbps
+        spec = BenchSpec(mixes=(mix,), sizes=(nbytes,), dtype=dtype_s,
+                         backend="pallas", block_rows=rows, passes=1,
+                         reps=reps, warmup=1, interpret=interpret)
+        table[rows] = runner.run(spec).points[0].gbps
     best = max(table, key=table.get)
-    return TuneResult(nbytes=nbytes, dtype=str(jnp.dtype(dtype)), mix=mix,
+    return TuneResult(nbytes=nbytes, dtype=dtype_s, mix=mix,
                       best_rows=best, table=table)
 
 

@@ -26,38 +26,35 @@ which XLA-level code cannot express without the load being dead-code).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.bench.mixes import FMA_DEPTHS, MixDef
 
-@dataclass(frozen=True)
-class Mix:
-    name: str
-    flops_per_elem: float     # arithmetic per element per pass
-    reads_per_elem: float = 1.0
-    writes_per_elem: float = 0.0
+# legacy alias — the registry's MixDef is attribute-compatible with the old Mix
+Mix = MixDef
 
 
-def mixes(fma_depths=(1, 2, 4, 8, 16, 32, 64)) -> dict[str, Mix]:
-    out = {
-        "load_sum": Mix("load_sum", 1.0),
-        "copy": Mix("copy", 0.0, reads_per_elem=1.0, writes_per_elem=1.0),
-        "mxu": Mix("mxu", 2.0 * 128.0),
-    }
+def mixes(fma_depths=FMA_DEPTHS) -> dict[str, Mix]:
+    """Legacy view of the shared registry (repro.bench.mixes), restricted to
+    the XLA-runnable mixes, with the fma family restricted to exactly the
+    requested chain depths.  Mixes are declared exactly once, there."""
+    from repro.bench.mixes import get_mix, registry
+    out = {name: m for name, m in registry().items()
+           if m.supports("xla") and not name.startswith("fma_")}
     for k in fma_depths:
-        out[f"fma_{k}"] = Mix(f"fma_{k}", 2.0 * k)
+        out[f"fma_{k}"] = get_mix(f"fma_{k}")
     return out
 
 
 def bytes_per_pass(mix: Mix, nbytes: int) -> float:
-    return (mix.reads_per_elem + mix.writes_per_elem) * nbytes
+    return mix.bytes_per_pass(nbytes)
 
 
 def flops_per_pass(mix: Mix, n_elems: int) -> float:
-    return mix.flops_per_elem * n_elems
+    return mix.flops_per_pass(n_elems)
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +118,53 @@ def k_mxu(x, w, passes: int):
     return acc
 
 
+@partial(jax.jit, static_argnames=("streams", "passes"))
+def k_strided_sum(x, streams: int, passes: int):
+    """load_sum over S interleaved strided address streams (C3 — the paper's
+    multi-pointer addressing study; stride defeats the linear prefetcher)."""
+    def body(_, carry):
+        x, acc = carry
+        s = jnp.float32(0)
+        for k in range(streams):               # S interleaved address streams
+            s = s + jnp.sum(x[k::streams], dtype=jnp.float32)
+        eps = (s * 1e-30).astype(x.dtype).reshape(())
+        return (x.at[0, 0].add(eps), acc + s)
+    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("rows", "passes"))
+def k_blocked_sum(x, rows: int, passes: int):
+    """load_sum walking the buffer in (rows, lanes) blocks (C4 — the
+    LD1D/LD2D/LD4D registers-per-load analogue)."""
+    n_blocks = x.shape[0] // rows
+
+    def body(_, carry):
+        x, acc = carry
+
+        def inner(i, a):
+            blk = jax.lax.dynamic_slice_in_dim(x, i * rows, rows, axis=0)
+            return a + jnp.sum(blk, dtype=jnp.float32)
+
+        s = jax.lax.fori_loop(0, n_blocks, inner, jnp.float32(0))
+        eps = (s * 1e-30).astype(x.dtype).reshape(())
+        return (x.at[0, 0].add(eps), acc + s)
+
+    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("passes",))
+def k_triad(a, b, c, passes: int):
+    """STREAM triad a = b + s*c with a self-dependence chaining the passes."""
+    def body(_, carry):
+        a, acc = carry
+        a = b + 1.5 * c + a * 1e-30          # triad with self-dependence
+        return (a, acc + a[0, 0].astype(jnp.float32))
+    a, acc = jax.lax.fori_loop(0, passes, body, (a, jnp.float32(0)))
+    return acc
+
+
 def run_mix(mix_name: str, x, passes: int, w=None):
     if mix_name == "load_sum":
         return k_load_sum(x, passes)
@@ -130,6 +174,8 @@ def run_mix(mix_name: str, x, passes: int, w=None):
         if w is None:
             w = jnp.eye(x.shape[-1], dtype=x.dtype)
         return k_mxu(x, w, passes)
+    if mix_name == "triad":
+        return k_triad(jnp.zeros_like(x), x, x * 0.5, passes)
     if mix_name.startswith("fma_"):
         return k_fma(x, passes, int(mix_name.split("_")[1]))
     raise KeyError(mix_name)

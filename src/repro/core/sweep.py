@@ -1,8 +1,10 @@
-"""Hierarchy throughput sweep — C1 of the paper.
+"""Legacy hierarchy-sweep API — now a thin wrapper over ``repro.bench``.
 
-One run walks working-set sizes across every level of the memory hierarchy
-(host: L1d -> L2 -> L3 -> DRAM; TPU target: VMEM -> HBM), measuring each
-instruction mix at each size.  This *is* the paper's Figure 2/5/6 engine.
+``run_sweep`` builds a BenchSpec and hands it to the Runner (the repo's one
+measurement loop); SweepPoint/SweepResult remain as the pre-``repro.bench``
+result schema for existing artifacts and callers.  New code should use
+``repro.bench.BenchSpec`` + ``Runner`` directly — BenchResult carries
+schema_version, backend, and machine metadata that this legacy schema lacks.
 """
 from __future__ import annotations
 
@@ -12,7 +14,7 @@ from pathlib import Path
 
 import jax.numpy as jnp
 
-from repro.core import buffers, instruction_mix, timing
+from repro.bench.runner import pick_passes  # noqa: F401  (legacy re-export)
 
 
 @dataclass
@@ -45,10 +47,15 @@ class SweepResult:
         d = json.loads(Path(path).read_text())
         return SweepResult([SweepPoint(**p) for p in d["points"]], d["meta"])
 
-
-def pick_passes(nbytes: int, target_bytes: float = 2e8) -> int:
-    """Enough passes that one timed call moves ~target_bytes (>= ms-scale)."""
-    return max(1, int(target_bytes / max(nbytes, 1)))
+    @staticmethod
+    def from_bench(res) -> "SweepResult":
+        """Downgrade a repro.bench.BenchResult to the legacy schema."""
+        return SweepResult(
+            points=[SweepPoint(nbytes=p.nbytes, mix=p.mix, dtype=p.dtype,
+                               passes=p.passes, mean_s=p.mean_s, std_s=p.std_s,
+                               gbps=p.gbps, gflops=p.gflops)
+                    for p in res.points],
+            meta=dict(res.meta))
 
 
 def run_sweep(sizes: list[int] | None = None,
@@ -56,26 +63,14 @@ def run_sweep(sizes: list[int] | None = None,
               dtype=jnp.float32,
               reps: int = 10,
               target_bytes: float = 2e8,
-              value: float = buffers.DEFAULT_VALUE) -> SweepResult:
-    sizes = sizes or buffers.sizes_logspace(16 * 2**10, 64 * 2**20, per_decade=6)
-    all_mixes = instruction_mix.mixes()
-    mix_names = mix_names or ["load_sum", "copy", "fma_8"]
-
-    res = SweepResult(meta={"dtype": str(jnp.dtype(dtype)), "reps": reps,
-                            "sizes": sizes, "mixes": mix_names})
-    for nbytes in sizes:
-        x = buffers.working_set(nbytes, dtype=dtype, value=value)
-        real_bytes = x.size * x.dtype.itemsize
-        passes = pick_passes(real_bytes, target_bytes)
-        for name in mix_names:
-            mix = all_mixes[name]
-            t = timing.time_fn(
-                lambda: instruction_mix.run_mix(name, x, passes),
-                reps=reps, warmup=2,
-                bytes_per_call=instruction_mix.bytes_per_pass(mix, real_bytes) * passes,
-                flops_per_call=instruction_mix.flops_per_pass(mix, x.size) * passes)
-            res.points.append(SweepPoint(
-                nbytes=real_bytes, mix=name, dtype=str(jnp.dtype(dtype)),
-                passes=passes, mean_s=t.mean_s, std_s=t.std_s,
-                gbps=t.gbps, gflops=t.gflops))
-    return res
+              value: float | None = None) -> SweepResult:
+    from repro.bench import BenchSpec, Runner
+    from repro.core import buffers
+    sizes = sizes or buffers.sizes_logspace(16 * 2**10, 64 * 2**20,
+                                            per_decade=6)
+    spec = BenchSpec(
+        mixes=tuple(mix_names or ("load_sum", "copy", "fma_8")),
+        sizes=tuple(sizes), dtype=str(jnp.dtype(dtype)), backend="xla",
+        reps=reps, warmup=2, target_bytes=target_bytes,
+        value=buffers.DEFAULT_VALUE if value is None else value)
+    return SweepResult.from_bench(Runner().run(spec))

@@ -149,7 +149,8 @@ class ShardCtx:
 
 
 def make_smoke_ctx() -> ShardCtx:
-    """1-device mesh with the production axis names (CPU tests)."""
+    """1-device mesh with the production axis names (CPU tests).  On jax
+    0.4.x the AxisType/axis_types surface comes from repro.compat."""
     mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
     return ShardCtx(mesh)

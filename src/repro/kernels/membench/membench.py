@@ -65,6 +65,11 @@ def _copy_kernel(x_ref, o_ref):
     o_ref[...] = x_ref[...]
 
 
+def _triad_kernel(b_ref, c_ref, o_ref):
+    """STREAM triad a = b + s*c per tile (2 read streams, 1 write stream)."""
+    o_ref[...] = b_ref[...] + jnp.asarray(1.5, b_ref.dtype) * c_ref[...]
+
+
 def _stream_index_map(streams: int, n_blocks: int):
     """Block visit order: i -> interleaved across `streams` equal segments.
     streams=1 is the sequential (single-pointer) walk."""
@@ -78,8 +83,9 @@ def _stream_index_map(streams: int, n_blocks: int):
 
 def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
                   block_rows: int = 128, streams: int = 1,
-                  interpret: bool = True):
-    """x: (rows, 128) f32/bf16; returns scalar (load-family) or copy output."""
+                  interpret: bool = True, y=None):
+    """x: (rows, 128) f32/bf16; returns scalar (load-family) or array (copy /
+    triad) output.  ``triad`` needs a second same-shape operand ``y``."""
     rows, lanes = x.shape
     assert rows % block_rows == 0, (rows, block_rows)
     n_blocks = rows // block_rows
@@ -103,6 +109,18 @@ def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
             out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
             interpret=interpret,
         )(x)
+
+    if base_mix == "triad":
+        assert y is not None and y.shape == x.shape, "triad needs y of x.shape"
+        return pl.pallas_call(
+            _triad_kernel,
+            grid=(n_blocks,),
+            in_specs=[pl.BlockSpec((block_rows, lanes), imap),
+                      pl.BlockSpec((block_rows, lanes), imap)],
+            out_specs=pl.BlockSpec((block_rows, lanes), imap),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(x, y)
 
     kern = functools.partial(_acc_kernel, base_mix, depth)
     return pl.pallas_call(

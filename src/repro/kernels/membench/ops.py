@@ -1,7 +1,9 @@
-"""jit'd wrappers + work accounting for the membench Pallas kernels."""
-from __future__ import annotations
+"""jit'd wrappers + work accounting for the membench Pallas kernels.
 
-import functools
+Accounting delegates to the shared mix registry (``repro.bench.mixes``) so the
+Pallas path and the XLA oracles can never disagree about bytes/flops.
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -9,36 +11,86 @@ import jax.numpy as jnp
 from repro.kernels.membench.membench import membench_call
 
 
+def _split_mix(mix: str, depth: int) -> tuple[str, int]:
+    """'fma_4' -> ('fma', 4); other names pass through with default depth."""
+    if mix.startswith("fma_"):
+        return "fma", int(mix.split("_")[1])
+    return mix, depth
+
+
 def make_kernel(mix: str = "load_sum", depth: int = 8, block_rows: int = 128,
                 streams: int = 1, interpret: bool = True):
-    """Returns jit'd fn(x) -> jax array (scalar or copy output)."""
-    depth_eff = depth
-    if mix.startswith("fma_"):
-        depth_eff = int(mix.split("_")[1])
-        mix = "fma"
+    """Returns jit'd fn(x) -> jax array (scalar or array output).
+
+    ``triad`` returns fn(x, y) — two read streams, one write stream.
+    """
+    base_mix, depth_eff = _split_mix(mix, depth)
+
+    if base_mix == "triad":
+        @jax.jit
+        def fn2(x, y):
+            return membench_call(x, mix="triad", depth=depth_eff,
+                                 block_rows=block_rows, streams=streams,
+                                 interpret=interpret, y=y)
+        return fn2
 
     @jax.jit
     def fn(x):
-        return membench_call(x, mix=mix, depth=depth_eff,
+        return membench_call(x, mix=base_mix, depth=depth_eff,
                              block_rows=block_rows, streams=streams,
                              interpret=interpret)
 
     return fn
 
 
+def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
+                      block_rows: int = 128, streams: int = 1,
+                      interpret: bool = True, passes: int = 1):
+    """Like make_kernel, but loops ``passes`` times over the buffer inside one
+    compiled call (the paper's measurement loop) so dispatch overhead does not
+    swamp cache-resident working sets.  A one-element self-dependent
+    perturbation chains the iterations (defeats loop-invariant hoisting, as in
+    the XLA oracles).  Always returns a scalar fn — fn(x), or fn(x, y) for
+    ``triad``."""
+    base_mix, _ = _split_mix(mix, depth)
+    one = make_kernel(mix, depth=depth, block_rows=block_rows,
+                      streams=streams, interpret=interpret)
+
+    def _chain(x, r, acc):
+        val = r if getattr(r, "ndim", 0) == 0 else r.reshape(-1)[0]
+        acc = acc + val.astype(jnp.float32)
+        eps = (acc * 1e-30).astype(x.dtype).reshape(())
+        return x.at[(0,) * x.ndim].add(eps), acc
+
+    if base_mix == "triad":
+        @jax.jit
+        def fn2(x, y):
+            def body(_, carry):
+                x, acc = carry
+                x, acc = _chain(x, one(x, y), acc)
+                return (x, acc)
+            _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+            return acc
+        return fn2
+
+    @jax.jit
+    def fn(x):
+        def body(_, carry):
+            x, acc = carry
+            x, acc = _chain(x, one(x), acc)
+            return (x, acc)
+        _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+        return acc
+
+    return fn
+
+
 def work_per_call(mix: str, x, depth: int = 8) -> tuple[float, float]:
-    """(bytes, flops) moved/executed by one kernel invocation."""
-    nbytes = float(x.size * x.dtype.itemsize)
-    n = float(x.size)
-    if mix == "load_only":
-        return nbytes, 0.0
-    if mix == "load_sum":
-        return nbytes, n
-    if mix == "copy":
-        return 2 * nbytes, 0.0
-    if mix.startswith("fma"):
-        d = int(mix.split("_")[1]) if "_" in mix else depth
-        return nbytes, 2.0 * d * n
-    if mix == "mxu":
-        return nbytes, 2.0 * 128 * n
-    raise KeyError(mix)
+    """(bytes, flops) moved/executed by one kernel invocation — straight from
+    the shared mix registry."""
+    from repro.bench import mixes as mixreg
+    name = mix
+    if mix == "fma":
+        name = f"fma_{depth}"
+    m = mixreg.get_mix(name)
+    return m.bytes_per_pass(x.size * x.dtype.itemsize), m.flops_per_pass(x.size)

@@ -16,6 +16,10 @@ def ref_copy(x):
     return x
 
 
+def ref_triad(x, y):
+    return x + jnp.asarray(1.5, x.dtype) * y
+
+
 def ref_fma(x, depth: int):
     v = x.astype(jnp.float32)
     a = jnp.float32(1.0000001)
@@ -37,7 +41,7 @@ def ref_mxu(x, block_rows: int):
     return total
 
 
-def reference(mix: str, x, depth: int = 8, block_rows: int = 128):
+def reference(mix: str, x, depth: int = 8, block_rows: int = 128, y=None):
     if mix == "load_only":
         # accumulated over blocks: one lane per block
         rows = x.shape[0]
@@ -48,6 +52,8 @@ def reference(mix: str, x, depth: int = 8, block_rows: int = 128):
         return ref_load_sum(x)
     if mix == "copy":
         return ref_copy(x)
+    if mix == "triad":
+        return ref_triad(x, y)
     if mix.startswith("fma"):
         return ref_fma(x, depth)
     if mix == "mxu":

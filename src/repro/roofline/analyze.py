@@ -148,6 +148,8 @@ def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
 def analyze(compiled, model_flops: float | None = None) -> dict:
     """Full §Roofline record for one compiled (arch x shape x mesh) cell."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax 0.4.x: one dict per computation
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(compiled.as_text())

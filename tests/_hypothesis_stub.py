@@ -1,0 +1,78 @@
+"""Lightweight fallback for ``hypothesis`` when it is not installed.
+
+Implements just the surface these tests use — ``given``, ``settings`` and the
+``floats`` / ``integers`` / ``sampled_from`` strategies — as a deterministic
+example generator: boundary values first, then seeded-random draws.  Install
+the real thing for actual property-based shrinking:
+
+    pip install -e .[test]     # see pyproject.toml [test] extra
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, edges, gen):
+        self.edges = list(edges)   # deterministic boundary examples
+        self.gen = gen             # rng -> random example
+
+    def draw(self, rng, i):
+        if i < len(self.edges):
+            return self.edges[i]
+        return self.gen(rng)
+
+
+def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+           allow_infinity=False, **_):
+    lo, hi = float(min_value), float(max_value)
+    mid = lo + (hi - lo) / 2.0
+    return _Strategy([lo, hi, mid], lambda rng: rng.uniform(lo, hi))
+
+
+def integers(min_value=0, max_value=2**31 - 1, **_):
+    lo, hi = int(min_value), int(max_value)
+    return _Strategy([lo, hi], lambda rng: rng.randint(lo, hi))
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(elems, lambda rng: rng.choice(elems))
+
+
+st = types.SimpleNamespace(floats=floats, integers=integers,
+                           sampled_from=sampled_from)
+
+
+class settings:
+    """Decorator: records max_examples on the (possibly given-wrapped) fn."""
+
+    def __init__(self, max_examples=10, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 10))
+            rng = random.Random(0)
+            for i in range(n):
+                vals = [s.draw(rng, i) for s in strategies]
+                fn(*args, *vals, **kwargs)
+        # hide the strategy-filled (rightmost) params from pytest, which
+        # would otherwise try to resolve them as fixtures
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strategies)])
+        return wrapper
+    return deco

@@ -1,0 +1,297 @@
+"""repro.bench: spec validation + JSON round-trip, mix-registry parity across
+backends (identical bytes/flops accounting from the shared registry), Runner
+smoke in interpret mode, CLI surface, and the relative-baseline fix."""
+import json
+
+import pytest
+
+from repro.bench import (BenchSpec, BenchSpecError, BenchResult, Runner,
+                         get_mix, mix_names, quick_spec, registry)
+from repro.bench.result import BenchPoint, SCHEMA_VERSION
+
+TINY = dict(sizes=(16 * 2**10,), reps=2, warmup=1, passes=1)
+
+
+# ---------------------------------------------------------------------------
+# BenchSpec validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_spec_defaults_valid():
+    s = BenchSpec()
+    assert s.backend == "xla" and s.mixes == ("load_sum",)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(backend="cuda"),
+    dict(mixes=("nope",)),
+    dict(mixes=()),
+    dict(mixes=("load_only",)),            # pallas-only mix on xla backend
+    dict(sizes=(0,)),
+    dict(sizes=()),
+    dict(streams=0),
+    dict(block_rows=12),                   # not a multiple of 8
+    dict(reps=0),
+    dict(passes=0),
+    dict(target_bytes=0),
+    dict(dtype="floatzz"),
+])
+def test_spec_rejects(kw):
+    with pytest.raises(BenchSpecError):
+        BenchSpec(**kw)
+
+
+def test_spec_accepts_load_only_on_pallas():
+    s = BenchSpec(mixes=("load_only",), backend="pallas")
+    assert s.mixes == ("load_only",)
+
+
+def test_spec_json_roundtrip(tmp_path):
+    s = BenchSpec(mixes=("load_sum", "fma_4"), sizes=(2**14, 2**20),
+                  backend="pallas", block_rows=32, streams=2, reps=3,
+                  tags=("unit",))
+    p = tmp_path / "spec.json"
+    s.to_json(p)
+    back = BenchSpec.from_json(p)
+    assert back == s
+    # lists coming from hand-written JSON coerce to tuples
+    d = json.loads(s.to_json())
+    assert BenchSpec.from_dict(d) == s
+
+
+def test_spec_rejects_unknown_fields_and_newer_version():
+    with pytest.raises(BenchSpecError):
+        BenchSpec.from_dict({"mixes": ["load_sum"], "bogus": 1})
+    with pytest.raises(BenchSpecError):
+        BenchSpec.from_dict({"spec_version": 99})
+
+
+def test_spec_replace_is_frozen():
+    s = BenchSpec()
+    with pytest.raises(Exception):
+        s.backend = "pallas"
+    assert s.replace(backend="pallas").backend == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# mix registry — declared once, consumed by both backends
+# ---------------------------------------------------------------------------
+
+def test_registry_parity_accounting():
+    """Every dual-backend mix runs through the Runner on a tiny buffer on BOTH
+    backends and reports byte-identical bytes/flops accounting."""
+    runner = Runner()
+    for name in mix_names():
+        m = get_mix(name)
+        per_backend = {}
+        for backend in m.backends:
+            spec = BenchSpec(mixes=(name,), backend=backend, **TINY)
+            res = runner.run(spec)
+            (pt,) = res.points
+            assert pt.gbps > 0 and pt.mean_s > 0, (name, backend)
+            per_backend[backend] = (pt.bytes_per_call, pt.flops_per_call)
+        assert len(set(per_backend.values())) == 1, (name, per_backend)
+
+
+def test_registry_accounting_values():
+    n = 1024
+    nbytes = 4 * n
+    assert get_mix("load_sum").bytes_per_pass(nbytes) == nbytes
+    assert get_mix("load_sum").flops_per_pass(n) == n
+    assert get_mix("copy").bytes_per_pass(nbytes) == 2 * nbytes
+    assert get_mix("triad").bytes_per_pass(nbytes) == 3 * nbytes
+    assert get_mix("triad").flops_per_pass(n) == 2 * n
+    assert get_mix("fma_8").flops_per_pass(n) == 16 * n
+    assert get_mix("mxu").flops_per_pass(n) == 2 * 128 * n
+    assert get_mix("load_only").backends == ("pallas",)
+
+
+def test_legacy_views_delegate_to_registry():
+    from repro.core import instruction_mix
+    from repro.core.buffers import working_set
+    from repro.kernels.membench import ops as mb_ops
+    legacy = instruction_mix.mixes()
+    reg = registry()
+    for name, m in legacy.items():
+        if name in reg:
+            assert m == reg[name], name
+    x = working_set(32 * 1024)
+    assert mb_ops.work_per_call("copy", x) == (2 * x.size * 4, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Runner smoke + versioned results
+# ---------------------------------------------------------------------------
+
+def test_runner_smoke_and_result_roundtrip(tmp_path):
+    spec = BenchSpec(mixes=("load_sum", "copy"), sizes=(16 * 2**10, 64 * 2**10),
+                     reps=2, warmup=1, target_bytes=1e6)
+    res = Runner().run(spec)
+    assert len(res.points) == 4
+    assert res.schema_version == SCHEMA_VERSION
+    assert res.spec["backend"] == "xla"
+    assert res.machine["jax"] and res.machine["device_platform"]
+    for p in res.points:
+        assert p.backend == "xla" and p.gbps > 0 and p.passes >= 1
+    path = tmp_path / "res.json"
+    res.to_json(path)
+    back = BenchResult.from_json(path)
+    assert back.points == res.points
+    assert back.spec == res.spec
+
+
+def test_runner_pallas_interpret_smoke():
+    spec = BenchSpec(mixes=("load_only", "load_sum"), backend="pallas",
+                     block_rows=8, streams=2, **TINY)
+    res = Runner().run(spec)
+    assert [p.mix for p in res.points] == ["load_only", "load_sum"]
+    assert all(p.streams == 2 and p.block_rows == 8 for p in res.points)
+
+
+def test_runner_auto_passes():
+    from repro.bench.runner import pick_passes
+    assert pick_passes(1024, 1e6) == 976
+    assert pick_passes(10**9, 1e6) == 1
+    spec = BenchSpec(mixes=("load_sum",), sizes=(16 * 2**10,), reps=2,
+                     warmup=1, target_bytes=1e6)
+    (pt,) = Runner().run(spec).points
+    assert pt.passes == pick_passes(pt.nbytes, 1e6)
+
+
+def test_xla_backend_rejects_unsupported_knobs():
+    with pytest.raises(BenchSpecError):
+        Runner().run(BenchSpec(mixes=("copy",), streams=2, **TINY))
+    with pytest.raises(BenchSpecError):
+        Runner().run(BenchSpec(mixes=("copy",), block_rows=8, **TINY))
+
+
+def test_baseline_relative_zero_anchor():
+    """A 0.0 first measurement must STAY the baseline (rel=nan), not silently
+    re-anchor on the next point — the fig1 `base = base or gbps` bug."""
+    def pt(streams, gbps):
+        return BenchPoint(nbytes=1024, mix="load_sum", dtype="float32",
+                          backend="xla", passes=1, streams=streams,
+                          block_rows=None, reps=1, bytes_per_call=1024.0,
+                          flops_per_call=0.0, mean_s=1e-3, std_s=0.0,
+                          min_s=1e-3, gbps=gbps, gflops=0.0)
+    res = BenchResult(points=[pt(1, 0.0), pt(2, 5.0), pt(4, 10.0)])
+    rels = res.baseline_relative(group_key=lambda p: p.nbytes,
+                                 is_baseline=lambda p: p.streams == 1)
+    import math
+    assert all(math.isnan(r) for _, r in rels)   # anchored on the 0.0 point
+    res2 = BenchResult(points=[pt(1, 5.0), pt(2, 10.0)])
+    rels2 = dict(res2.baseline_relative(group_key=lambda p: p.nbytes,
+                                        is_baseline=lambda p: p.streams == 1))
+    assert rels2[pt(2, 10.0)] == pytest.approx(2.0)
+
+
+def test_runner_compare_filters_mixes():
+    out = Runner().compare(BenchSpec(mixes=("load_sum",), **TINY))
+    assert set(out) == {"xla", "pallas"}
+    for res in out.values():
+        assert res.points[0].mix == "load_sum"
+
+
+def test_runner_compare_filters_knob_conflicts():
+    """streams=2 keeps load_sum on xla and drops copy instead of aborting."""
+    spec = BenchSpec(mixes=("load_sum", "copy"), backend="pallas", streams=2,
+                     sizes=(128 * 2**10,), reps=2, warmup=1, passes=1)
+    out = Runner().compare(spec)
+    assert [p.mix for p in out["xla"].points] == ["load_sum"]
+    assert [p.mix for p in out["pallas"].points] == ["load_sum", "copy"]
+
+
+def test_run_many_envelope_records_all_specs():
+    base = BenchSpec(mixes=("load_sum",), **TINY)
+    res = Runner().run_many([base.replace(streams=s) for s in (1, 2)])
+    assert "many" in res.spec and len(res.spec["many"]) == 2
+    assert {p.streams for p in res.points} == {1, 2}
+    single = Runner().run_many([base])
+    assert "many" not in single.spec   # one spec: plain envelope
+
+
+def test_custom_backend_registration_usable():
+    from repro.bench.backends import _BACKENDS, register_backend
+    import jax.numpy as jnp
+
+    class EchoBackend:
+        name = "echo-test"
+
+        def supports(self, mix):
+            return mix.name == "load_sum"
+
+        def validate(self, spec):
+            pass
+
+        def build(self, spec, mix, x, passes):
+            return lambda: jnp.sum(x)
+
+    register_backend(EchoBackend())
+    try:
+        spec = BenchSpec(mixes=("load_sum",), backend="echo-test", **TINY)
+        (pt,) = Runner().run(spec).points
+        assert pt.backend == "echo-test" and pt.mean_s > 0
+        with pytest.raises(BenchSpecError):   # support set still enforced
+            BenchSpec(mixes=("copy",), backend="echo-test", **TINY)
+    finally:
+        _BACKENDS.pop("echo-test", None)
+
+
+def test_fma_family_open_ended():
+    """Any fma_k depth is a valid mix with synthesized accounting (the
+    registry lists only the canonical ladder)."""
+    m = get_mix("fma_3")
+    assert m.flops_per_elem == 6.0 and m.fma_depth == 3
+    assert "fma_3" not in registry()
+    with pytest.raises(KeyError):
+        get_mix("fma_zz")
+    (pt,) = Runner().run(BenchSpec(mixes=("fma_3",), **TINY)).points
+    assert pt.flops_per_call == 6.0 * (pt.nbytes / 4)
+
+
+def test_pallas_explicit_block_rows_never_clamped():
+    """An explicit block_rows that doesn't fit the buffer errors (on both
+    backends) rather than being silently adjusted and mis-recorded."""
+    with pytest.raises(BenchSpecError):
+        Runner().run(BenchSpec(mixes=("load_sum",), backend="pallas",
+                               block_rows=512, **TINY))
+
+
+def test_legacy_mixes_restricts_fma_depths():
+    from repro.core.instruction_mix import mixes
+    got = sorted(mixes(fma_depths=(2,)))
+    assert got == ["copy", "fma_2", "load_sum", "mxu", "triad"]
+
+
+# ---------------------------------------------------------------------------
+# legacy sweep wrapper + CLI
+# ---------------------------------------------------------------------------
+
+def test_legacy_run_sweep_routes_through_runner():
+    from repro.core import sweep
+    res = sweep.run_sweep(sizes=[16 * 2**10], mix_names=["load_sum"], reps=2,
+                          target_bytes=1e6)
+    assert isinstance(res, sweep.SweepResult)
+    assert res.points[0].mix == "load_sum" and res.points[0].gbps > 0
+    assert res.meta["mixes"] == ["load_sum"]
+
+
+def test_cli_run_and_list(tmp_path, capsys):
+    from repro.bench import cli
+    out = tmp_path / "r.json"
+    rc = cli.main(["run", "--quick", "--sizes", "16K", "--reps", "2",
+                   "--out", str(out)])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert d["schema_version"] == SCHEMA_VERSION and d["points"]
+    assert cli.main(["list-mixes"]) == 0
+    cap = capsys.readouterr()
+    assert "load_only" in cap.out and "triad" in cap.out
+
+
+def test_cli_compare(capsys):
+    from repro.bench import cli
+    rc = cli.main(["compare", "--mixes", "load_sum", "--sizes", "16K",
+                   "--reps", "2"])
+    assert rc == 0
+    cap = capsys.readouterr()
+    assert "load_sum" in cap.out and "mismatch" not in cap.out

@@ -8,8 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # optional dep; see pyproject [test]
+    from _hypothesis_stub import given, settings, st
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.ft.stragglers import StepTimer, probe_devices

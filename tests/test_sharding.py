@@ -2,8 +2,11 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                     # optional dep; see pyproject [test]
+    from _hypothesis_stub import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import ShardCtx

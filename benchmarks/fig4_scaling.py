@@ -5,9 +5,11 @@ hardware the same code produces the real per-chip HBM scaling curve (the
 paper's CMG saturation study); on host the 8 'devices' share one socket so the
 curve saturating early IS the expected result (shared-bandwidth NUMA analogue).
 
-The triad kernel is the registry's ``triad`` mix (STREAM comparison on A64FX
-in the paper) declared as a one-size BenchSpec; the multi-device curve stays
-in core.scaling (its own subsystem, pending a sharded backend).
+Everything here is a BenchSpec through ``repro.bench``: the scaling curve is
+the ``sharded`` backend swept over the ``devices`` knob (one spec per device
+count, merged by ``run_many``), with per-count speedup read off
+``BenchResult.baseline_relative``; the triad reference (the paper compares
+against STREAM on A64FX) is the registry's ``triad`` mix as a one-size spec.
 """
 import os
 if __name__ == "__main__":
@@ -18,21 +20,24 @@ import argparse           # noqa: E402
 
 from benchmarks.common import emit                       # noqa: E402
 from repro.bench import BenchSpec, Runner                # noqa: E402
-from repro.core.scaling import scaling_curve             # noqa: E402
 
 
 def main(quick: bool = False):
     per_dev = 2 * 2**20 if quick else 16 * 2**20
-    pts = scaling_curve(per_dev, device_counts=[1, 2, 4, 8],
-                        passes=4, reps=4 if quick else 8)
-    for p in pts:
+    runner = Runner()
+    specs = [BenchSpec(mixes=("load_sum",), sizes=(per_dev * k,),
+                       backend="sharded", devices=k, passes=4,
+                       reps=4 if quick else 8, warmup=2)
+             for k in (1, 2, 4, 8)]
+    res = runner.run_many(specs)
+    for p, speedup in res.baseline_relative(group_key=lambda p: p.mix):
         emit(f"fig4/devices{p.devices}", p.mean_s * 1e6,
-             f"{p.gbps:.2f}GB/s;speedup={p.speedup:.2f}x")
+             f"{p.gbps:.2f}GB/s;speedup={speedup:.2f}x")
 
     # STREAM triad reference (the paper compares against STREAM on A64FX)
     spec = BenchSpec(mixes=("triad",), sizes=(per_dev,), reps=4, warmup=2,
                      target_bytes=5e7)
-    t = Runner().run(spec).points[0]
+    t = runner.run(spec).points[0]
     emit("fig4/stream_triad_1dev", t.mean_s * 1e6, f"{t.gbps:.2f}GB/s")
 
 

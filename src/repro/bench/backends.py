@@ -1,10 +1,26 @@
-"""Pluggable benchmark backends: the XLA oracles and the Pallas embodiment.
+"""Pluggable benchmark backends: the XLA oracles, the Pallas embodiment, and
+the sharded multi-device backend (the paper's Figure-4 core-scaling study).
 
 A Backend turns (BenchSpec, mix, working set, passes) into a zero-arg callable
 whose return value is the serialization point for timing.  Work accounting is
 NOT a backend concern — the Runner reads it from the shared mix registry, so
-the two backends report identical bytes/flops for the same spec by
-construction.
+all backends report identical bytes/flops for the same spec by construction.
+
+The built-in backends split ``build`` into two halves so the Runner can cache
+the expensive one:
+
+    make_case(spec, mix, shape, dtype, passes)   the compiled callable —
+        a pure function of the knobs and the buffer *shape*, never closing
+        over a buffer.  The Runner caches these by key (see ``case_key``),
+        so knob sweeps (``run_many``) and ``compare`` stop re-tracing
+        identical kernels, and a cached case can never retain a working set.
+    bind_case(case, spec, mix, x)                per-buffer binding —
+        closes over the actual working set (plus any companion buffers,
+        e.g. triad's second read stream) and is rebuilt per size, then
+        dropped with the buffer.
+
+Third-party backends only need ``build`` (the original protocol); the Runner
+falls back to it, uncached, when ``make_case`` is absent.
 """
 from __future__ import annotations
 
@@ -36,7 +52,87 @@ class Backend(Protocol):
         ...
 
 
-class XLABackend:
+class _CaseBackend:
+    """Shared make_case/bind_case machinery for the built-in backends."""
+    multi_device = False     # True: accepts BenchSpec(devices > 1)
+
+    def case_key(self, spec: BenchSpec, mix: MixDef, shape, dtype,
+                 passes: int) -> tuple:
+        """Everything ``make_case`` depends on — the Runner's cache key."""
+        return (self.name, mix.name, tuple(shape), str(dtype), passes,
+                spec.streams, spec.block_rows, spec.devices, spec.interpret)
+
+    def make_case(self, spec: BenchSpec, mix: MixDef, shape, dtype,
+                  passes: int) -> Callable:
+        raise NotImplementedError
+
+    def prepare_buffer(self, spec: BenchSpec, x):
+        """Per-size buffer placement hook, called once before binding that
+        size's cases (e.g. the sharded backend spreads x over its mesh here
+        so per-mix bindings share one placed copy)."""
+        return x
+
+    def bind_case(self, case: Callable, spec: BenchSpec, mix: MixDef, x
+                  ) -> Callable[[], object]:
+        return lambda: case(x)
+
+    def build(self, spec, mix, x, passes):
+        case = self.make_case(spec, mix, x.shape, x.dtype, passes)
+        return self.bind_case(case, spec, mix, self.prepare_buffer(spec, x))
+
+
+def _validate_oracle_knobs(spec: BenchSpec, backend_name: str) -> None:
+    """Knob rules of the core.instruction_mix oracles (shared by the xla
+    backend and the sharded backend, which runs the same kernels per shard)."""
+    for m in spec.mixes:
+        mix = get_mix(m)
+        if "xla" not in mix.backends:
+            raise BenchSpecError(f"mix {m!r} not supported on {backend_name}")
+        if spec.streams > 1 and m != "load_sum":
+            raise BenchSpecError(
+                f"{backend_name} backend expresses streams>1 only for "
+                f"load_sum (the strided-walk oracle); got mix {m!r}")
+        if spec.block_rows is not None and m != "load_sum":
+            raise BenchSpecError(
+                f"{backend_name} backend expresses block_rows only for "
+                f"load_sum (the blocked-walk oracle); got mix {m!r}")
+    if spec.streams > 1 and spec.block_rows is not None:
+        raise BenchSpecError(f"{backend_name} backend: streams and "
+                             "block_rows are mutually exclusive knobs")
+
+
+def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
+                 backend_name: str) -> Callable:
+    """The per-shape oracle kernel for a mix (pure function of its inputs;
+    triad takes (a, b, c), everything else takes x)."""
+    from repro.core import instruction_mix as im
+    if mix.name == "load_sum" and spec.streams > 1:
+        streams = spec.streams
+        return lambda x: im.k_strided_sum(x, streams, passes)
+    if mix.name == "load_sum" and spec.block_rows is not None:
+        brows = spec.block_rows
+        if rows % brows:
+            raise BenchSpecError(
+                f"block_rows {brows} does not divide {rows} rows"
+                + ("" if backend_name == "xla" else
+                   f" (the per-device shard on {backend_name})"))
+        return lambda x: im.k_blocked_sum(x, brows, passes)
+    if mix.name == "triad":
+        return lambda a, b, c: im.k_triad(a, b, c, passes)
+    name = mix.name
+    return lambda x: im.run_mix(name, x, passes)
+
+
+def _bind_oracle_case(case: Callable, mix: MixDef, x) -> Callable[[], object]:
+    """Close an oracle case over its buffers; triad's companion streams are
+    built here, outside the timed call (shared by xla and sharded)."""
+    if mix.name == "triad":
+        a, b, c = jnp.zeros_like(x), x, x * 0.5
+        return lambda: case(a, b, c)
+    return lambda: case(x)
+
+
+class XLABackend(_CaseBackend):
     """The jnp oracles from core.instruction_mix (host-measurable)."""
     name = "xla"
 
@@ -44,41 +140,103 @@ class XLABackend:
         return self.name in mix.backends
 
     def validate(self, spec: BenchSpec) -> None:
-        for m in spec.mixes:
-            mix = get_mix(m)
-            if not self.supports(mix):
-                raise BenchSpecError(f"mix {m!r} not supported on xla")
-            if spec.streams > 1 and m != "load_sum":
-                raise BenchSpecError(
-                    "xla backend expresses streams>1 only for load_sum "
-                    f"(the strided-walk oracle); got mix {m!r}")
-            if spec.block_rows is not None and m != "load_sum":
-                raise BenchSpecError(
-                    "xla backend expresses block_rows only for load_sum "
-                    f"(the blocked-walk oracle); got mix {m!r}")
-        if spec.streams > 1 and spec.block_rows is not None:
-            raise BenchSpecError("xla backend: streams and block_rows are "
-                                 "mutually exclusive knobs")
+        _validate_oracle_knobs(spec, self.name)
 
-    def build(self, spec, mix, x, passes):
-        from repro.core import instruction_mix as im
-        if mix.name == "load_sum" and spec.streams > 1:
-            streams = spec.streams
-            return lambda: im.k_strided_sum(x, streams, passes)
-        if mix.name == "load_sum" and spec.block_rows is not None:
-            rows = spec.block_rows
-            if x.shape[0] % rows:
+    def make_case(self, spec, mix, shape, dtype, passes):
+        return _oracle_case(spec, mix, shape[0], passes, self.name)
+
+    def bind_case(self, case, spec, mix, x):
+        return _bind_oracle_case(case, mix, x)
+
+
+class ShardedBackend(_CaseBackend):
+    """The working set spread over the first k devices of a 1-D mesh.
+
+    Reproduces the paper's Figure-4 core-count scaling study (aggregate
+    bandwidth vs cores until the HBM2 interface saturates): each device runs
+    the *same* instruction-mix oracle the xla backend runs, over its shard,
+    via ``shard_map`` — so every mix that runs on ``xla`` runs sharded, with
+    identical bytes/flops accounting by construction (the Runner reads both
+    from the shared registry).  ``BenchSpec(devices=k)`` picks the mesh size;
+    at ``devices=1`` this degenerates to the xla backend plus mesh overhead.
+    """
+    name = "sharded"
+    multi_device = True
+
+    def __init__(self):
+        self._meshes: dict[int, object] = {}
+
+    def supports(self, mix: MixDef) -> bool:
+        # mixes._BACKEND_ALIASES maps sharded -> xla (single source of truth)
+        return mix.supports(self.name)
+
+    def _mesh(self, k: int):
+        mesh = self._meshes.get(k)
+        if mesh is None:
+            import jax
+            import numpy as np
+            from jax.sharding import Mesh
+            devs = jax.devices()
+            if k > len(devs):
                 raise BenchSpecError(
-                    f"block_rows {rows} does not divide {x.shape[0]} rows")
-            return lambda: im.k_blocked_sum(x, rows, passes)
+                    f"devices={k} exceeds the {len(devs)} visible device(s); "
+                    "force host devices with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N")
+            mesh = Mesh(np.array(devs[:k]).reshape(k), ("d",))
+            self._meshes[k] = mesh
+        return mesh
+
+    def validate(self, spec: BenchSpec) -> None:
+        _validate_oracle_knobs(spec, self.name)
+        self._mesh(spec.devices)        # device-count check
+
+    def make_case(self, spec, mix, shape, dtype, passes):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        k = spec.devices
+        rows, lanes = shape
+        if rows % k:
+            raise BenchSpecError(
+                f"devices={k} does not divide the {rows}-row working set")
+        mesh = self._mesh(k)
+        shard = _oracle_case(spec, mix, rows // k, passes, self.name)
+        n_args = 3 if mix.name == "triad" else 1   # triad: (a, b, c) streams
+
+        def body(*vs):                   # each v: (1, rows // k, lanes)
+            return shard(*(v[0] for v in vs)).reshape(1)
+
+        smap = jax.shard_map(body, mesh=mesh,
+                             in_specs=(P("d", None, None),) * n_args,
+                             out_specs=P("d"), check_vma=False)
+
+        @jax.jit
+        def fn(*xs):
+            return smap(*(x.reshape(k, rows // k, lanes) for x in xs)).sum()
+
+        return fn
+
+    def _sharding(self, k: int):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self._mesh(k), P("d", None))
+
+    def prepare_buffer(self, spec, x):
+        """One mesh placement per size — every mix's binding shares it."""
+        import jax
+        return jax.device_put(x, self._sharding(spec.devices))
+
+    def bind_case(self, case, spec, mix, x):
         if mix.name == "triad":
-            b, c = x, x * 0.5
-            a = jnp.zeros_like(x)
-            return lambda: im.k_triad(a, b, c, passes)
-        return lambda: im.run_mix(mix.name, x, passes)
+            # companions live outside the timed call, placed like x (which
+            # prepare_buffer already spread across the mesh)
+            import jax
+            sharding = self._sharding(spec.devices)
+            a = jax.device_put(jnp.zeros_like(x), sharding)
+            c = jax.device_put(x * 0.5, sharding)
+            return lambda: case(a, x, c)
+        return lambda: case(x)
 
 
-class PallasBackend:
+class PallasBackend(_CaseBackend):
     """The Pallas TPU kernels (kernels/membench) with explicit VMEM tiling.
 
     interpret=True validates kernel-body semantics on CPU; on real TPU set
@@ -90,33 +248,40 @@ class PallasBackend:
     def supports(self, mix: MixDef) -> bool:
         return self.name in mix.backends
 
-    def _resolve(self, spec: BenchSpec, x) -> int:
+    def _resolve(self, spec: BenchSpec, rows: int) -> int:
         if spec.block_rows is not None:
             return spec.block_rows       # explicit knob: never adjusted
-        return min(self.DEFAULT_BLOCK_ROWS, x.shape[0])
+        # default tiling must divide the buffer: largest sublane multiple
+        # <= 128 that does (rows is always a multiple of 8, so 8 divides)
+        r = min(self.DEFAULT_BLOCK_ROWS, rows)
+        while r > 8 and rows % r:
+            r -= 8
+        return r
 
     def validate(self, spec: BenchSpec) -> None:
         for m in spec.mixes:
             if not self.supports(get_mix(m)):
                 raise BenchSpecError(f"mix {m!r} not supported on pallas")
 
-    def build(self, spec, mix, x, passes):
+    def make_case(self, spec, mix, shape, dtype, passes):
         from repro.kernels.membench import ops as mb_ops
-        rows = self._resolve(spec, x)
-        if rows > x.shape[0] or x.shape[0] % rows:
+        rows = self._resolve(spec, shape[0])
+        if rows > shape[0] or shape[0] % rows:
             raise BenchSpecError(
-                f"block_rows {rows} does not divide {x.shape[0]} rows")
-        n_blocks = x.shape[0] // rows
+                f"block_rows {rows} does not divide {shape[0]} rows")
+        n_blocks = shape[0] // rows
         if n_blocks % spec.streams:
             raise BenchSpecError(
                 f"streams {spec.streams} does not divide {n_blocks} blocks")
-        fn = mb_ops.make_timed_kernel(
+        return mb_ops.make_timed_kernel(
             mix.name, depth=mix.fma_depth or 8, block_rows=rows,
             streams=spec.streams, interpret=spec.interpret, passes=passes)
+
+    def bind_case(self, case, spec, mix, x):
         if mix.name == "triad":
             y = x * 0.5
-            return lambda: fn(x, y)
-        return lambda: fn(x)
+            return lambda: case(x, y)
+        return lambda: case(x)
 
 
 _BACKENDS: dict[str, Backend] = {}
@@ -128,6 +293,7 @@ def register_backend(backend: Backend) -> Backend:
 
 
 register_backend(XLABackend())
+register_backend(ShardedBackend())
 register_backend(PallasBackend())
 
 

@@ -40,6 +40,8 @@ def _spec_from_args(args) -> BenchSpec:
         kw["reps"] = args.reps
     if args.streams is not None:
         kw["streams"] = args.streams
+    if args.devices is not None:
+        kw["devices"] = args.devices
     if args.block_rows is not None:
         kw["block_rows"] = args.block_rows
     if args.dtype is not None:
@@ -54,11 +56,13 @@ def _add_spec_flags(p: argparse.ArgumentParser):
                    help="path to a BenchSpec JSON (overrides other flags)")
     p.add_argument("--quick", action="store_true",
                    help="small sizes / few reps smoke preset")
-    p.add_argument("--backend", default="xla", help="xla | pallas")
+    p.add_argument("--backend", default="xla", help="xla | sharded | pallas")
     p.add_argument("--mixes", default=None, help="comma list, e.g. load_sum,copy")
     p.add_argument("--sizes", default=None, help="comma list, K/M/G ok: 32K,2M")
     p.add_argument("--reps", type=int, default=None)
     p.add_argument("--streams", type=int, default=None)
+    p.add_argument("--devices", type=int, default=None,
+                   help="mesh devices (multi-device backends, e.g. sharded)")
     p.add_argument("--block-rows", dest="block_rows", type=int, default=None)
     p.add_argument("--dtype", default=None)
 
@@ -122,6 +126,10 @@ def cmd_compare(args) -> int:
         if len(acct) > 1:
             mismatch = True
             print(f"  !! accounting mismatch for {mix}: {acct}")
+    skipped = next(iter(results.values())).meta.get("skipped", {})
+    for b, items in sorted(skipped.items()):
+        for mix, reason in items:
+            print(f"# skipped {b}/{mix}: {reason}")
     if args.out:
         json.dump({b: r.to_dict() for b, r in results.items()},
                   open(args.out, "w"), indent=2)

@@ -27,6 +27,10 @@ from dataclasses import dataclass
 
 FMA_DEPTHS = (1, 2, 4, 8, 16, 32, 64)
 
+# execution aliases: the sharded backend runs the xla oracles per shard, so a
+# mix runnable on xla is runnable sharded (same kernels, same accounting)
+_BACKEND_ALIASES = {"sharded": "xla"}
+
 
 @dataclass(frozen=True)
 class MixDef:
@@ -46,7 +50,7 @@ class MixDef:
         return self.flops_per_elem * n_elems
 
     def supports(self, backend: str) -> bool:
-        return backend in self.backends
+        return _BACKEND_ALIASES.get(backend, backend) in self.backends
 
 
 def _build_registry() -> dict[str, MixDef]:

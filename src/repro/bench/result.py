@@ -6,6 +6,10 @@ addressing knobs it was measured under, and explicit bytes/flops accounting
 are directly comparable.  The envelope carries ``schema_version``, the spec
 that produced it, and machine metadata — a result file is a reproducible
 record, not just numbers.
+
+schema_version history: 1 = original point schema; 2 = points carry
+``devices`` (the multi-device knob).  Version-1 files load with the
+single-device default.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import platform
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -34,6 +38,7 @@ class BenchPoint:
     min_s: float
     gbps: float
     gflops: float
+    devices: int = 1            # schema v2; v1 files load with the default
 
 
 @dataclass

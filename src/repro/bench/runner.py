@@ -1,11 +1,19 @@
 """The Runner — pass-picking, warmup, serialized timing, result assembly.
 
 This is the ONE measurement loop in the repo.  The figure scripts, the legacy
-``core.sweep`` wrapper, the autotuner, and the CLI all hand it a BenchSpec;
-it owns the repetition discipline (warmup + reps via ``core.timing``), the
-pass-picking policy (enough internal passes that one timed call moves
-``target_bytes`` — the paper's measurement-loop sizing), and emits a
-schema-versioned BenchResult.
+``core.sweep`` / ``core.scaling`` wrappers, the autotuner, and the CLI all
+hand it a BenchSpec; it owns the repetition discipline (warmup + reps via
+``core.timing``), the pass-picking policy (enough internal passes that one
+timed call moves ``target_bytes`` — the paper's measurement-loop sizing), and
+emits a schema-versioned BenchResult.
+
+Memory discipline: working sets are built lazily, one size at a time, and
+released as soon as that size's cases are timed — peak footprint is one
+working set (plus companions, e.g. triad's second stream), not the sum of
+every size in the sweep.  Compiled cases are cached per Runner instance,
+keyed by (backend, mix, shape, dtype, passes, knobs): a knob sweep via
+``run_many`` or a ``compare`` re-times cached kernels instead of re-tracing
+them, and a cached case never closes over a buffer (see bench.backends).
 """
 from __future__ import annotations
 
@@ -22,81 +30,109 @@ def pick_passes(nbytes: int, target_bytes: float = 2e8) -> int:
 
 
 class Runner:
-    """Executes BenchSpecs.  Stateless apart from the backend registry (and a
-    buffer cache scoped to a run_many call)."""
+    """Executes BenchSpecs.  Stateless apart from the backend registry and
+    the compiled-case cache (kernels only — never working-set buffers)."""
 
     def __init__(self):
-        self._buffers: dict | None = None   # (nbytes, dtype, value) -> array
+        self._cases: dict[tuple, object] = {}   # case_key -> compiled case
+        self.cache_hits = 0
+        self.cache_misses = 0
 
-    def _working_set(self, spec: BenchSpec, nbytes: int):
-        from repro.core import buffers
-        key = (nbytes, spec.dtype, spec.value)
-        if self._buffers is not None and key in self._buffers:
-            return self._buffers[key]
-        x = buffers.working_set(nbytes, dtype=jnp.dtype(spec.dtype),
-                                value=spec.value)
-        if self._buffers is not None:
-            self._buffers[key] = x
-        return x
+    # -- compiled-case cache --------------------------------------------
+    def _case(self, backend, spec: BenchSpec, mix, shape, dtype, passes: int):
+        """Cache-aware make_case; returns the compiled callable-of-buffers."""
+        key = backend.case_key(spec, mix, shape, dtype, passes)
+        case = self._cases.get(key)
+        if case is None:
+            self.cache_misses += 1
+            case = backend.make_case(spec, mix, shape, dtype, passes)
+            self._cases[key] = case
+        else:
+            self.cache_hits += 1
+        return case
 
     def run(self, spec: BenchSpec, extra_meta: dict | None = None
             ) -> BenchResult:
-        from repro.core import timing
+        from repro.bench.mixes import get_mix
+        from repro.core import buffers, timing
         backend = get_backend(spec.backend)
         backend.validate(spec)
-        from repro.bench.mixes import get_mix
+        cacheable = hasattr(backend, "make_case")
 
-        # build every case first: a data-dependent knob error (block_rows /
-        # streams not dividing some size) surfaces before any timing is spent
-        cases = []
+        # plan every case up front from shapes alone (no buffers yet): a
+        # data-dependent knob error (block_rows / streams / devices not
+        # dividing some size) surfaces before any timing is spent, and the
+        # compiled-case cache is populated without retaining working sets.
+        # (build()-only third-party backends get no shape pre-check — their
+        # data-dependent errors surface lazily, when their size is reached)
+        plan = []       # (nbytes, shape, [(mix, passes, case|None, bpc, fpc)])
+        dtype = jnp.dtype(spec.dtype)
         for nbytes in spec.sizes:
-            x = self._working_set(spec, nbytes)
-            real_bytes = x.size * x.dtype.itemsize
+            shape = buffers.working_set_shape(nbytes, dtype=dtype)
+            n_elems = shape[0] * shape[1]
+            real_bytes = n_elems * dtype.itemsize
             passes = spec.passes or pick_passes(real_bytes, spec.target_bytes)
+            group = []
             for name in spec.mixes:
                 mix = get_mix(name)
-                fn = backend.build(spec, mix, x, passes)
+                case = (self._case(backend, spec, mix, shape, dtype, passes)
+                        if cacheable else None)
                 bpc = mix.bytes_per_pass(real_bytes) * passes
-                fpc = mix.flops_per_pass(x.size) * passes
-                cases.append((real_bytes, x, name, passes, fn, bpc, fpc))
+                fpc = mix.flops_per_pass(n_elems) * passes
+                group.append((mix, passes, case, bpc, fpc))
+            plan.append((real_bytes, shape, group))
 
         res = BenchResult(
             spec=spec.to_dict(), machine=machine_meta(),
             meta={"dtype": spec.dtype, "reps": spec.reps,
                   "sizes": list(spec.sizes), "mixes": list(spec.mixes),
                   **(extra_meta or {})})
-        for real_bytes, x, name, passes, fn, bpc, fpc in cases:
-            t = timing.time_fn(fn, reps=spec.reps, warmup=spec.warmup,
-                               bytes_per_call=bpc, flops_per_call=fpc)
-            res.points.append(BenchPoint(
-                nbytes=real_bytes, mix=name, dtype=spec.dtype,
-                backend=spec.backend, passes=passes, streams=spec.streams,
-                block_rows=spec.block_rows, reps=spec.reps,
-                bytes_per_call=bpc, flops_per_call=fpc,
-                mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
-                gbps=t.gbps, gflops=t.gflops))
+        prepare = getattr(backend, "prepare_buffer", None)
+        for nbytes, (real_bytes, shape, group) in zip(spec.sizes, plan):
+            # lazy build: exactly one working set lives at a time
+            x = buffers.working_set(nbytes, dtype=dtype, value=spec.value)
+            if prepare is not None:     # e.g. sharded: one mesh placement
+                x = prepare(spec, x)    # per size, shared by every mix
+            for mix, passes, case, bpc, fpc in group:
+                if case is not None:
+                    fn = backend.bind_case(case, spec, mix, x)
+                else:
+                    fn = backend.build(spec, mix, x, passes)
+                t = timing.time_fn(fn, reps=spec.reps, warmup=spec.warmup,
+                                   bytes_per_call=bpc, flops_per_call=fpc)
+                del fn      # drop companion buffers with the case binding
+                res.points.append(BenchPoint(
+                    nbytes=real_bytes, mix=mix.name, dtype=spec.dtype,
+                    backend=spec.backend, passes=passes, streams=spec.streams,
+                    block_rows=spec.block_rows, reps=spec.reps,
+                    bytes_per_call=bpc, flops_per_call=fpc,
+                    mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
+                    gbps=t.gbps, gflops=t.gflops, devices=spec.devices))
+            del x           # release this size before building the next
         return res
 
     def run_many(self, specs, extra_meta: dict | None = None) -> BenchResult:
-        """Run several specs into one result (e.g. a streams or block_rows
-        sweep, where the knob lives on the spec rather than the point list).
-        With more than one distinct spec the envelope records all of them
-        (``spec["many"]``); each point carries its own knobs regardless.
-        Working-set buffers are shared across the specs, so sweeping a knob
-        does not re-initialize every buffer per knob value."""
-        fresh = self._buffers is None
-        if fresh:
-            self._buffers = {}
-        try:
-            results = [self.run(s, extra_meta=extra_meta) for s in specs]
-        finally:
-            if fresh:
-                self._buffers = None
+        """Run several specs into one result (e.g. a streams / block_rows /
+        devices sweep, where the knob lives on the spec rather than the point
+        list).  With more than one distinct spec the envelope records all of
+        them (``spec["many"]``) and the meta knob lists (``sizes``/``mixes``)
+        are the union across the merged specs; each point carries its own
+        knobs regardless.  Compiled cases are shared across the specs (the
+        Runner-level cache), so sweeping a knob re-traces nothing that
+        already compiled."""
+        results = [self.run(s, extra_meta=extra_meta) for s in specs]
         if not results:
             raise ValueError("run_many needs at least one spec")
         merged = results[0]
         for r in results[1:]:
             merged.points.extend(r.points)
+        # the envelope must describe ALL merged points, not results[0]'s
+        merged.meta["sizes"] = sorted({s for r in results
+                                       for s in r.meta["sizes"]})
+        mixes: list[str] = []
+        for r in results:
+            mixes.extend(m for m in r.meta["mixes"] if m not in mixes)
+        merged.meta["mixes"] = mixes
         spec_dicts = [r.spec for r in results]
         if any(d != spec_dicts[0] for d in spec_dicts[1:]):
             merged.spec = {"spec_version": spec_dicts[0]["spec_version"],
@@ -109,25 +145,38 @@ class Runner:
         oracle-vs-embodiment cross-check.  Mixes are filtered per backend by
         *full* validation (support set and knob combinations), so e.g.
         ``streams=4`` keeps load_sum on xla and drops copy rather than
-        aborting the whole comparison."""
-        out = {}
+        aborting the whole comparison.  Nothing is dropped silently: every
+        skipped (backend, mix) lands in each result's
+        ``meta["skipped"] = {backend: [[mix, reason], ...]}``, and if *no*
+        backend can run the spec the skip map is raised as a BenchSpecError
+        instead of returning an empty dict."""
+        out: dict[str, BenchResult] = {}
+        skipped: dict[str, list[list[str]]] = {}
         for b in backends:
             names = []
             for m in spec.mixes:
                 try:
                     sub = spec.replace(backend=b, mixes=(m,))
                     get_backend(b).validate(sub)
-                except (BenchSpecError, KeyError):
+                except (BenchSpecError, KeyError) as e:
+                    skipped.setdefault(b, []).append([m, str(e)])
                     continue
                 names.append(m)
             if not names:
                 continue
             try:
                 out[b] = self.run(spec.replace(backend=b, mixes=tuple(names)))
-            except BenchSpecError:
+            except BenchSpecError as e:
                 # data-dependent constraint (e.g. streams vs. block count for
-                # this buffer): this backend can't run the spec — skip it
+                # this buffer): this backend can't run the spec — record it
+                skipped.setdefault(b, []).extend([m, str(e)] for m in names)
                 continue
+        if not out:
+            raise BenchSpecError(f"no backend could run the spec; "
+                                 f"skipped: {skipped}")
+        if skipped:
+            for res in out.values():
+                res.meta["skipped"] = skipped
         return out
 
 

@@ -9,7 +9,12 @@ the Runner executes on any registered backend.  Knob -> paper mapping:
     mixes        C2  instruction-mix ladder (see repro.bench.mixes)
     streams      C3  interleaved address streams (addressing-mode overhead)
     block_rows   C4  rows per load step (LD1D/LD2D/LD4D analogue)
+    devices      Fig 4  working set spread over the first k mesh devices
+                 (multi-device backends only, e.g. ``sharded``)
     reps/warmup/passes   the serialized-timing repetition discipline (§4/§5)
+
+spec_version history: 1 = original knob set; 2 = adds ``devices`` (older
+files load with the single-device default).
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ from pathlib import Path
 
 from repro.bench import mixes as mixreg
 
-SPEC_VERSION = 1
+SPEC_VERSION = 2
 
 
 class BenchSpecError(ValueError):
@@ -36,6 +41,7 @@ class BenchSpec:
     backend: str = "xla"
     block_rows: int | None = None     # None = backend default tiling
     streams: int = 1
+    devices: int = 1                  # mesh devices (multi-device backends)
     passes: int | None = None         # None = auto from target_bytes
     target_bytes: float = 2e8         # auto pass-picking: bytes per timed call
     reps: int = 10
@@ -75,6 +81,13 @@ class BenchSpec:
             raise BenchSpecError(f"sizes must be positive ints: {self.sizes}")
         if self.streams < 1:
             raise BenchSpecError(f"streams must be >= 1: {self.streams}")
+        if self.devices < 1:
+            raise BenchSpecError(f"devices must be >= 1: {self.devices}")
+        if self.devices > 1 and not getattr(backend, "multi_device", False):
+            raise BenchSpecError(
+                f"backend {self.backend!r} runs on a single device; "
+                f"devices={self.devices} needs a multi-device backend "
+                f"(e.g. 'sharded')")
         if self.block_rows is not None and (
                 self.block_rows < 1 or self.block_rows % 8):
             raise BenchSpecError(

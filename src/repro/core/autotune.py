@@ -40,7 +40,7 @@ def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
     from repro.bench import BenchSpec, Runner
     from repro.core import buffers
     dtype_s = str(jnp.dtype(dtype))
-    rows_total = buffers.working_set(nbytes, dtype=dtype).shape[0]
+    rows_total = buffers.working_set_shape(nbytes, dtype=dtype)[0]
     runner = Runner()
     table = {}
     for rows in CANDIDATE_ROWS:

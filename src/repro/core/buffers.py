@@ -24,12 +24,20 @@ def init_pattern(n: int, value: float = DEFAULT_VALUE, dtype=jnp.float32):
     return arr
 
 
+def working_set_shape(nbytes: int, dtype=jnp.float32, lanes: int = 128
+                      ) -> tuple[int, int]:
+    """The (rows, lanes) shape ``working_set`` would allocate for ~nbytes —
+    lets callers plan/validate a sweep without touching device memory."""
+    itemsize = jnp.dtype(dtype).itemsize
+    rows = max(8, int(round(nbytes / (lanes * itemsize) / 8)) * 8)
+    return (rows, lanes)
+
+
 def working_set(nbytes: int, dtype=jnp.float32, value: float = DEFAULT_VALUE,
                 lanes: int = 128):
     """A 2D (rows, lanes) buffer of ~nbytes — 2D so Pallas BlockSpecs tile it
     natively ((8,128)-aligned, the v5e register tile)."""
-    itemsize = jnp.dtype(dtype).itemsize
-    rows = max(8, int(round(nbytes / (lanes * itemsize) / 8)) * 8)
+    rows, lanes = working_set_shape(nbytes, dtype, lanes)
     n = rows * lanes
     if jnp.issubdtype(dtype, jnp.integer):
         cycle = np.array([1, 7, -1, -7], dtype=np.int64)

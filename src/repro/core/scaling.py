@@ -1,20 +1,18 @@
-"""Multi-device scaling curves — the paper's Figure 4 (HBM2 scaling vs cores).
+"""Legacy multi-device scaling API — now a thin wrapper over ``repro.bench``.
 
-Shards a working set over the first k devices and measures aggregate load
-throughput; on hardware this reproduces the CMG-saturation study (6 cores
-saturate one HBM2 stack), here it validates the harness on host devices.
+The paper's Figure 4 (HBM2 scaling vs cores) is served by the ``sharded``
+backend: ``BenchSpec(backend="sharded", devices=k)`` places the working set
+across the first k devices of a 1-D mesh and runs the shared mix registry's
+kernels per shard.  ``scaling_curve`` remains for existing callers but owns
+no measurement loop — it declares one BenchSpec per device count and lets
+the Runner execute them through ``run_many``.
+New code should use ``repro.bench`` directly; BenchResult carries the
+``devices`` knob per point plus schema/machine metadata this legacy view
+lacks.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.core import buffers, timing
-from repro.core.instruction_mix import run_mix
 
 
 @dataclass
@@ -29,31 +27,18 @@ class ScalingPoint:
 
 def scaling_curve(nbytes_per_device: int, mix: str = "load_sum",
                   device_counts=None, passes: int = 8, reps: int = 8):
-    devs = jax.devices()
+    """Weak-scaling sweep: ``nbytes_per_device * k`` total bytes on k devices,
+    speedup relative to the first device count measured."""
+    import jax
+
+    from repro.bench import BenchSpec, Runner
     device_counts = device_counts or [d for d in (1, 2, 4, 8, 16, 32, 64)
-                                      if d <= len(devs)]
-    import numpy as np
-    points = []
-    base = None
-    for k in device_counts:
-        mesh = Mesh(np.array(devs[:k]).reshape(k), ("d",))
-        x = buffers.working_set(nbytes_per_device * k)
-        x = jax.device_put(x, NamedSharding(mesh, P("d", None)))
-
-        def fn(x):
-            def body(v):  # v: (1, rows_local, 128) per device
-                return run_mix(mix, v[0], passes).reshape(1)
-            return jax.shard_map(body, mesh=mesh, in_specs=P("d", None, None),
-                                 out_specs=P("d"), check_vma=False)(
-                x.reshape(k, -1, x.shape[-1])).sum()
-
-        t = timing.time_fn(jax.jit(fn), x, reps=reps, warmup=2,
-                           bytes_per_call=float(x.size * x.dtype.itemsize) * passes)
-        gbps = t.gbps
-        if base is None:
-            base = gbps
-        points.append(ScalingPoint(devices=k, mix=mix,
-                                   nbytes_total=x.size * x.dtype.itemsize,
-                                   mean_s=t.mean_s, gbps=gbps,
-                                   speedup=gbps / base))
-    return points
+                                      if d <= jax.device_count()]
+    specs = [BenchSpec(mixes=(mix,), sizes=(nbytes_per_device * k,),
+                       backend="sharded", devices=k, passes=passes,
+                       reps=reps, warmup=2)
+             for k in device_counts]
+    res = Runner().run_many(specs)
+    return [ScalingPoint(devices=p.devices, mix=p.mix, nbytes_total=p.nbytes,
+                         mean_s=p.mean_s, gbps=p.gbps, speedup=rel)
+            for p, rel in res.baseline_relative(group_key=lambda p: p.mix)]

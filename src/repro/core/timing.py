@@ -62,9 +62,11 @@ def time_fn(fn, *args, reps: int = 20, warmup: int = 3,
             ) -> TimingResult:
     """Time ``fn(*args)``; fn must return a jax array (serialization point)."""
     import jax
-    for _ in range(warmup):
+    if warmup:                 # warmup=0 is valid: first timed rep compiles
         out = fn(*args)
-    jax.block_until_ready(out)
+        for _ in range(warmup - 1):
+            out = fn(*args)
+        jax.block_until_ready(out)
     times = []
     for _ in range(reps):
         t0 = time.perf_counter_ns()

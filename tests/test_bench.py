@@ -29,6 +29,9 @@ def test_spec_defaults_valid():
     dict(sizes=(0,)),
     dict(sizes=()),
     dict(streams=0),
+    dict(devices=0),
+    dict(devices=2),                       # xla is single-device
+    dict(devices=2, backend="pallas"),     # pallas is single-device
     dict(block_rows=12),                   # not a multiple of 8
     dict(reps=0),
     dict(passes=0),
@@ -184,6 +187,91 @@ def test_baseline_relative_zero_anchor():
     assert rels2[pt(2, 10.0)] == pytest.approx(2.0)
 
 
+def test_time_fn_warmup_zero():
+    """warmup=0 must not crash (the UnboundLocalError on `out`): the first
+    timed rep simply pays compilation."""
+    import jax.numpy as jnp
+    from repro.core import timing
+    t = timing.time_fn(lambda: jnp.zeros(8), reps=2, warmup=0,
+                       bytes_per_call=1.0)
+    assert len(t.times_s) == 2 and t.mean_s > 0
+
+
+def test_spec_warmup_zero_end_to_end():
+    """BenchSpec validation allows warmup=0, so the Runner must run it."""
+    spec = BenchSpec(mixes=("load_sum",), sizes=(16 * 2**10,), reps=2,
+                     warmup=0, passes=1)
+    (pt,) = Runner().run(spec).points
+    assert pt.mean_s > 0 and pt.gbps > 0
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas", "sharded"])
+def test_sweep_releases_buffers(monkeypatch, backend):
+    """A size sweep holds ONE working set at a time — earlier sizes' buffers
+    are collectible while later sizes are being timed, not retained for the
+    whole run (as the build-everything-up-front case list used to do), and
+    the compiled-case cache never pins one either."""
+    import gc
+    import weakref
+    from repro.bench.backends import get_backend
+    from repro.core import buffers, timing
+    refs = []
+    real_ws = buffers.working_set
+
+    def spy_ws(nbytes, **kw):
+        x = real_ws(nbytes, **kw)
+        refs.append(weakref.ref(x))
+        return x
+
+    # also track placed copies (sharded swaps the host buffer for a mesh one)
+    be = get_backend(backend)
+    real_prep = be.prepare_buffer
+
+    def spy_prep(spec, x):
+        y = real_prep(spec, x)
+        refs.append(weakref.ref(y))
+        return y
+
+    peak = 0
+    real_tf = timing.time_fn
+
+    def spy_tf(fn, *a, **kw):
+        nonlocal peak
+        gc.collect()
+        alive = {id(r()) for r in refs if r() is not None}
+        peak = max(peak, len(alive))
+        return real_tf(fn, *a, **kw)
+
+    monkeypatch.setattr(buffers, "working_set", spy_ws)
+    monkeypatch.setattr(be, "prepare_buffer", spy_prep)
+    monkeypatch.setattr(timing, "time_fn", spy_tf)
+    sizes = (16 * 2**10, 64 * 2**10, 256 * 2**10, 1 * 2**20)
+    runner = Runner()
+    runner.run(BenchSpec(mixes=("load_sum", "copy"), backend=backend,
+                         sizes=sizes, reps=2, warmup=1, passes=1))
+    assert len(refs) >= len(sizes)
+    assert peak == 1, f"{peak} working sets live at once on {backend}"
+    assert runner._cases            # cached cases outlive the buffers
+    gc.collect()
+    assert all(r() is None for r in refs)
+
+
+def test_compiled_case_cache_hits():
+    """Re-running a spec (or sweeping an unrelated knob) re-times cached
+    kernels instead of re-tracing them."""
+    r = Runner()
+    base = BenchSpec(mixes=("load_sum",), **TINY)
+    r.run(base)
+    assert (r.cache_hits, r.cache_misses) == (0, 1)
+    r.run(base)
+    assert (r.cache_hits, r.cache_misses) == (1, 1)
+    r.run_many([base, base.replace(streams=2)])   # streams=2 is a new case
+    assert (r.cache_hits, r.cache_misses) == (2, 2)
+    fresh = Runner()                               # cache is per-instance
+    fresh.run(base)
+    assert (fresh.cache_hits, fresh.cache_misses) == (0, 1)
+
+
 def test_runner_compare_filters_mixes():
     out = Runner().compare(BenchSpec(mixes=("load_sum",), **TINY))
     assert set(out) == {"xla", "pallas"}
@@ -207,6 +295,66 @@ def test_run_many_envelope_records_all_specs():
     assert {p.streams for p in res.points} == {1, 2}
     single = Runner().run_many([base])
     assert "many" not in single.spec   # one spec: plain envelope
+
+
+def test_run_many_unions_meta_across_specs():
+    """The merged envelope must describe ALL merged points — sizes/mixes are
+    the union across specs, not results[0]'s lists."""
+    a = BenchSpec(mixes=("load_sum",), **TINY)
+    b = a.replace(mixes=("copy",), sizes=(64 * 2**10,))
+    res = Runner().run_many([a, b])
+    assert res.meta["sizes"] == [16 * 2**10, 64 * 2**10]
+    assert res.meta["mixes"] == ["load_sum", "copy"]
+    assert {p.mix for p in res.points} == {"load_sum", "copy"}
+
+
+def test_compare_records_skipped():
+    """compare must not drop mixes/backends silently: every skipped
+    (backend, mix) pair lands in meta['skipped'] with its reason."""
+    spec = BenchSpec(mixes=("load_sum", "copy"), backend="pallas", streams=2,
+                     sizes=(128 * 2**10,), reps=2, warmup=1, passes=1)
+    out = Runner().compare(spec)
+    sk = out["xla"].meta["skipped"]
+    assert [m for m, _ in sk["xla"]] == ["copy"]       # streams>1 on copy
+    assert "streams" in sk["xla"][0][1]
+    assert all(res.meta["skipped"] == sk for res in out.values())
+
+
+def test_compare_raises_when_nothing_runnable():
+    """A comparison where every backend is skipped raises with the skip map
+    instead of returning an empty dict."""
+    spec = BenchSpec(mixes=("load_only",), backend="pallas", **TINY)
+    with pytest.raises(BenchSpecError, match="load_only"):
+        Runner().compare(spec, backends=("xla",))
+
+
+def test_cli_compare_prints_skipped(capsys):
+    from repro.bench import cli
+    rc = cli.main(["compare", "--mixes", "load_sum,copy", "--streams", "2",
+                   "--sizes", "128K", "--reps", "2"])
+    assert rc == 0
+    cap = capsys.readouterr()
+    assert "# skipped xla/copy:" in cap.out
+
+
+def test_spec_devices_roundtrip_and_v1_backcompat():
+    s = BenchSpec(mixes=("load_sum",), backend="sharded", devices=1, **TINY)
+    d = json.loads(s.to_json())
+    assert d["spec_version"] == 2 and d["devices"] == 1
+    assert BenchSpec.from_dict(d) == s
+    old = {k: v for k, v in d.items() if k != "devices"}   # a v1 spec file
+    old["spec_version"] = 1
+    assert BenchSpec.from_dict(old).devices == 1
+
+
+def test_result_v1_backcompat_defaults_devices():
+    pt = dict(nbytes=1024, mix="load_sum", dtype="float32", backend="xla",
+              passes=1, streams=1, block_rows=None, reps=1,
+              bytes_per_call=1024.0, flops_per_call=0.0, mean_s=1e-3,
+              std_s=0.0, min_s=1e-3, gbps=1.0, gflops=0.0)
+    res = BenchResult.from_dict({"schema_version": 1, "points": [pt]})
+    assert res.points[0].devices == 1
+    assert res.schema_version == 1
 
 
 def test_custom_backend_registration_usable():

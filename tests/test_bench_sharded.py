@@ -1,0 +1,126 @@
+"""The sharded multi-device backend: cross-backend accounting parity vs xla,
+the devices knob through spec/result round-trips, the weak-scaling curve on 8
+forced host devices (subprocess — tests see 1 device by design, see
+conftest.py), and compiled-case cache behavior across device counts."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.bench import BenchSpec, BenchSpecError, BenchResult, Runner, mix_names
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+TINY = dict(sizes=(16 * 2**10,), reps=2, warmup=1, passes=1)
+
+
+# ---------------------------------------------------------------------------
+# single-device (in-process): parity, validation, round-trips
+# ---------------------------------------------------------------------------
+
+def test_sharded_accounting_parity_vs_xla():
+    """Every xla-runnable mix runs sharded at devices=1 with byte-identical
+    bytes/flops accounting (both read the shared registry)."""
+    runner = Runner()
+    for name in mix_names("xla"):
+        acct = {}
+        for backend in ("xla", "sharded"):
+            spec = BenchSpec(mixes=(name,), backend=backend, **TINY)
+            (pt,) = runner.run(spec).points
+            assert pt.gbps > 0 and pt.mean_s > 0, (name, backend)
+            acct[backend] = (pt.bytes_per_call, pt.flops_per_call)
+        assert acct["xla"] == acct["sharded"], (name, acct)
+
+
+def test_sharded_supports_exactly_the_xla_mixes():
+    assert mix_names("sharded") == mix_names("xla")
+    with pytest.raises(BenchSpecError):    # load_only is pallas-only
+        BenchSpec(mixes=("load_only",), backend="sharded", **TINY)
+
+
+def test_sharded_rejects_more_devices_than_visible():
+    """conftest guarantees this process sees one device."""
+    spec = BenchSpec(mixes=("load_sum",), backend="sharded", devices=2, **TINY)
+    with pytest.raises(BenchSpecError, match="devices=2"):
+        Runner().run(spec)
+
+
+def test_sharded_knob_rules_match_xla():
+    """The per-shard kernels are the oracles, so the oracle knob rules hold."""
+    with pytest.raises(BenchSpecError):
+        Runner().run(BenchSpec(mixes=("copy",), backend="sharded", streams=2,
+                               **TINY))
+    with pytest.raises(BenchSpecError):
+        Runner().run(BenchSpec(mixes=("load_sum",), backend="sharded",
+                               streams=2, block_rows=8, **TINY))
+
+
+def test_sharded_point_carries_devices_and_roundtrips(tmp_path):
+    spec = BenchSpec(mixes=("load_sum",), backend="sharded", devices=1, **TINY)
+    res = Runner().run(spec)
+    (pt,) = res.points
+    assert pt.devices == 1 and pt.backend == "sharded"
+    path = tmp_path / "res.json"
+    res.to_json(path)
+    back = BenchResult.from_json(path)
+    assert back.points == res.points
+    assert back.spec["devices"] == 1
+
+
+# ---------------------------------------------------------------------------
+# 8 forced host devices (subprocess)
+# ---------------------------------------------------------------------------
+
+SHARDED_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+from repro.bench import BenchSpec, BenchResult, Runner
+
+per_dev = 256 * 2**10
+runner = Runner()
+specs = [BenchSpec(mixes=("load_sum",), sizes=(per_dev * k,),
+                   backend="sharded", devices=k, passes=2, reps=2, warmup=1)
+         for k in (1, 2, 4, 8)]
+res = runner.run_many(specs)
+
+# one point per device count, each stamped with its knob
+assert [p.devices for p in res.points] == [1, 2, 4, 8], res.points
+assert all(p.gbps > 0 for p in res.points)
+assert res.meta["sizes"] == [per_dev * k for k in (1, 2, 4, 8)]
+
+# speedup curve shape: anchored at 1.0 on devices=1, finite and positive
+rels = res.baseline_relative(group_key=lambda p: p.mix)
+assert abs(rels[0][1] - 1.0) < 1e-9, rels[0]
+assert all(r > 0 for _, r in rels), rels
+assert [p.devices for p, _ in rels] == sorted(p.devices for p, _ in rels)
+
+# devices knob round-trips through the serialized result
+back = BenchResult.from_dict(json.loads(res.to_json()))
+assert [p.devices for p in back.points] == [1, 2, 4, 8]
+assert [s["devices"] for s in back.spec["many"]] == [1, 2, 4, 8]
+
+# compiled-case cache: re-running the sweep re-traces nothing
+misses = runner.cache_misses
+runner.run_many(specs)
+assert runner.cache_misses == misses, (runner.cache_misses, misses)
+assert runner.cache_hits >= len(specs)
+
+# legacy wrapper rides the same backend (no measurement loop of its own)
+from repro.core.scaling import scaling_curve
+pts = scaling_curve(per_dev, device_counts=[1, 2], passes=2, reps=2)
+assert [p.devices for p in pts] == [1, 2] and pts[0].speedup == 1.0
+
+print("SHARDED_OK", [round(p.gbps, 2) for p in res.points])
+"""
+
+
+def test_sharded_scaling_8dev_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SHARDED_SNIPPET],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED_OK" in r.stdout

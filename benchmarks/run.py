@@ -37,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: bench,fig1,fig2,fig3,fig4,table1,"
+                    help="comma list: bench,fig1,fig2,fig3,fig4,fig5,table1,"
                          "collectives,roofline")
     args = ap.parse_args()
     quick = not args.full
@@ -70,6 +70,10 @@ def main() -> None:
     if want("fig4"):
         print("\n## fig4: device scaling + STREAM triad (8-device subprocess)")
         _subproc("benchmarks.fig4_scaling", quick)
+    if want("fig5"):
+        print("\n## fig5: R:W-ratio sweep, store-path attribution (rw family)")
+        from benchmarks import fig5_rw_ratio
+        fig5_rw_ratio.main(quick=quick)
     if want("collectives"):
         print("\n## collectives: ICI-analogue link throughput (subprocess)")
         _subproc("benchmarks.collective_bench_main", quick)

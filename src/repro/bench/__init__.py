@@ -13,7 +13,9 @@ CLI: ``python -m repro.bench {run,list-mixes,compare}``.
 Heavy submodules (backends pull in the kernel packages) load lazily so that
 ``repro.core`` modules can import the mix registry without a cycle.
 """
-from repro.bench.mixes import FMA_DEPTHS, MixDef, get_mix, mix_names, registry  # noqa: F401
+from repro.bench.mixes import (FMA_DEPTHS, MAX_RW, MixDef,  # noqa: F401
+                               RW_RATIOS, get_mix, mix_names, registry,
+                               rw_name, rw_ratio)
 from repro.bench.result import (BenchPoint, BenchResult,  # noqa: F401
                                 SCHEMA_VERSION, machine_meta)
 from repro.bench.spec import (BenchSpec, BenchSpecError,  # noqa: F401
@@ -30,9 +32,9 @@ _LAZY = {
 }
 
 __all__ = ["BenchSpec", "BenchSpecError", "BenchPoint", "BenchResult",
-           "MixDef", "FMA_DEPTHS", "SCHEMA_VERSION", "SPEC_VERSION",
-           "registry", "get_mix", "mix_names", "machine_meta", "quick_spec",
-           *_LAZY]
+           "MixDef", "FMA_DEPTHS", "MAX_RW", "RW_RATIOS", "SCHEMA_VERSION",
+           "SPEC_VERSION", "registry", "get_mix", "mix_names", "rw_name",
+           "rw_ratio", "machine_meta", "quick_spec", *_LAZY]
 
 
 def __getattr__(name):

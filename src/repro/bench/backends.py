@@ -101,10 +101,40 @@ def _validate_oracle_knobs(spec: BenchSpec, backend_name: str) -> None:
                              "block_rows are mutually exclusive knobs")
 
 
+def _mix_arity(mix: MixDef) -> int:
+    """Positional buffer count of a mix's oracle case (reads then writes)."""
+    if mix.name == "triad":
+        return 3
+    if mix.rw is not None:
+        return mix.rw[0] + mix.rw[1]
+    return 1
+
+
+def _mix_operands(mix: MixDef, x, place=lambda a: a) -> tuple:
+    """Every buffer a mix's oracle case consumes, in positional order, built
+    OUTSIDE the timed call.  ``x`` passes through as-is (the Runner already
+    placed it via prepare_buffer); companion streams — triad's (a, c), the rw
+    family's extra read and write streams — go through ``place`` (identity on
+    xla, a mesh device_put on sharded)."""
+    if mix.name == "triad":
+        return (place(jnp.zeros_like(x)), x, place(x * 0.5))
+    if mix.rw is not None:
+        from repro.core.instruction_mix import rw_streams
+        reads, writes = mix.rw
+        # the W write-seed slots only supply shape/dtype — k_rw overwrites
+        # every output before reading it — so alias x rather than allocating
+        # W zero buffers (peak footprint stays one working set + companions)
+        return ((x,)
+                + tuple(place(s) for s in rw_streams(x, reads)[1:])
+                + (x,) * writes)
+    return (x,)
+
+
 def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
                  backend_name: str) -> Callable:
     """The per-shape oracle kernel for a mix (pure function of its inputs;
-    triad takes (a, b, c), everything else takes x)."""
+    triad takes (a, b, c), rw_RtoW takes its R+W stream buffers, everything
+    else takes x)."""
     from repro.core import instruction_mix as im
     if mix.name == "load_sum" and spec.streams > 1:
         streams = spec.streams
@@ -119,17 +149,18 @@ def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
         return lambda x: im.k_blocked_sum(x, brows, passes)
     if mix.name == "triad":
         return lambda a, b, c: im.k_triad(a, b, c, passes)
+    if mix.rw is not None:
+        reads = mix.rw[0]
+        return lambda *bufs: im.k_rw(bufs[:reads], bufs[reads:], passes)
     name = mix.name
     return lambda x: im.run_mix(name, x, passes)
 
 
 def _bind_oracle_case(case: Callable, mix: MixDef, x) -> Callable[[], object]:
-    """Close an oracle case over its buffers; triad's companion streams are
-    built here, outside the timed call (shared by xla and sharded)."""
-    if mix.name == "triad":
-        a, b, c = jnp.zeros_like(x), x, x * 0.5
-        return lambda: case(a, b, c)
-    return lambda: case(x)
+    """Close an oracle case over its buffers; companion streams are built
+    here, outside the timed call (shared by xla and sharded)."""
+    bufs = _mix_operands(mix, x)
+    return lambda: case(*bufs)
 
 
 class XLABackend(_CaseBackend):
@@ -200,7 +231,7 @@ class ShardedBackend(_CaseBackend):
                 f"devices={k} does not divide the {rows}-row working set")
         mesh = self._mesh(k)
         shard = _oracle_case(spec, mix, rows // k, passes, self.name)
-        n_args = 3 if mix.name == "triad" else 1   # triad: (a, b, c) streams
+        n_args = _mix_arity(mix)    # triad: (a, b, c); rw_RtoW: R+W streams
 
         def body(*vs):                   # each v: (1, rows // k, lanes)
             return shard(*(v[0] for v in vs)).reshape(1)
@@ -225,15 +256,13 @@ class ShardedBackend(_CaseBackend):
         return jax.device_put(x, self._sharding(spec.devices))
 
     def bind_case(self, case, spec, mix, x):
-        if mix.name == "triad":
-            # companions live outside the timed call, placed like x (which
-            # prepare_buffer already spread across the mesh)
-            import jax
-            sharding = self._sharding(spec.devices)
-            a = jax.device_put(jnp.zeros_like(x), sharding)
-            c = jax.device_put(x * 0.5, sharding)
-            return lambda: case(a, x, c)
-        return lambda: case(x)
+        # companions live outside the timed call, placed like x (which
+        # prepare_buffer already spread across the mesh)
+        import jax
+        sharding = self._sharding(spec.devices)
+        bufs = _mix_operands(mix, x,
+                             place=lambda a: jax.device_put(a, sharding))
+        return lambda: case(*bufs)
 
 
 class PallasBackend(_CaseBackend):
@@ -281,6 +310,12 @@ class PallasBackend(_CaseBackend):
         if mix.name == "triad":
             y = x * 0.5
             return lambda: case(x, y)
+        if mix.rw is not None:
+            # the Pallas embodiment allocates its W outputs via out_shape;
+            # only the R read streams are bound (outside the timed call)
+            from repro.core.instruction_mix import rw_streams
+            bufs = rw_streams(x, mix.rw[0])
+            return lambda: case(*bufs)
         return lambda: case(x)
 
 

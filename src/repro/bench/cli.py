@@ -57,7 +57,8 @@ def _add_spec_flags(p: argparse.ArgumentParser):
     p.add_argument("--quick", action="store_true",
                    help="small sizes / few reps smoke preset")
     p.add_argument("--backend", default="xla", help="xla | sharded | pallas")
-    p.add_argument("--mixes", default=None, help="comma list, e.g. load_sum,copy")
+    p.add_argument("--mixes", "--mix", default=None,
+                   help="comma list, e.g. load_sum,copy,rw_3to1")
     p.add_argument("--sizes", default=None, help="comma list, K/M/G ok: 32K,2M")
     p.add_argument("--reps", type=int, default=None)
     p.add_argument("--streams", type=int, default=None)
@@ -83,12 +84,17 @@ def cmd_run(args) -> int:
 
 
 def cmd_list_mixes(args) -> int:
+    from repro.bench.mixes import MAX_RW, mix_names
+    reg = registry()
     print(f"{'mix':10s} {'flops/elem':>10s} {'reads':>6s} {'writes':>6s}  "
           f"{'backends':16s} description")
-    for name, m in sorted(registry().items()):
+    for name in mix_names():     # deterministic: family parameter, then name
+        m = reg[name]
         print(f"{name:10s} {m.flops_per_elem:10.1f} {m.reads_per_elem:6.1f} "
               f"{m.writes_per_elem:6.1f}  {'+'.join(m.backends):16s} "
               f"{m.description}")
+    print(f"# open-ended families: fma_k (any k >= 1), rw_RtoW "
+          f"(any R, W in 1..{MAX_RW}); the table lists the canonical ladders")
     return 0
 
 

@@ -21,6 +21,18 @@ from pathlib import Path
 SCHEMA_VERSION = 2
 
 
+def level_band(level_size: int | None,
+               prev_size: float) -> tuple[float, float]:
+    """Working-set band that cleanly sits inside one hierarchy level:
+    (2x previous level, 0.5x this level); an unbounded level (DRAM/HBM,
+    ``level_size=None``) opens to infinity.  The paper's §6 banding
+    discipline, defined ONCE — ``summarize`` and ``core.analysis`` (which
+    re-exports this) both read it."""
+    lo = 2.0 * prev_size
+    hi = 0.5 * level_size if level_size else float("inf")
+    return lo, hi
+
+
 @dataclass(frozen=True)
 class BenchPoint:
     nbytes: int                 # real working-set bytes
@@ -77,6 +89,50 @@ class BenchResult:
             base = bases.get(group_key(p))
             rel = p.gbps / base if base else float("nan")
             out.append((p, rel))
+        return out
+
+    def summarize(self, levels=None, min_band_bytes: int = 4 * 2**10) -> dict:
+        """Per-level bandwidth attribution folded into the result — the
+        paper's §6 'cumulative mean per hierarchy level', as a view on the
+        points, so figure scripts stop re-deriving L1/L2/DRAM tables.
+
+        ``levels`` is an ordered sequence (innermost first) of memory levels:
+        either ``(name, size_bytes)`` pairs or objects with ``.name`` /
+        ``.size_bytes`` attributes (e.g. ``core.machine_model.MemLevel``);
+        ``size_bytes=None`` means unbounded (DRAM/HBM).  ``None`` summarizes
+        everything into a single ``"all"`` level.  Each level's band is
+        (2x previous level size, 0.5x this level size) so the mean sits
+        cleanly inside one level; the innermost band opens at
+        ``min_band_bytes``.
+
+        Returns ``{level: {mix: {"gbps", "rel", "n", "band"}}}`` where
+        ``rel`` is the mix's throughput relative to the best mix at that
+        level (the paper's FADD/NOP/LOAD penalty ratios) and ``n`` the point
+        count inside the band.  Levels with no points are omitted.
+        """
+        if levels is None:
+            levels = (("all", None),)
+        out: dict[str, dict] = {}
+        prev = min_band_bytes / 2.0
+        for lvl in levels:
+            name, size = (lvl if isinstance(lvl, (tuple, list))
+                          else (lvl.name, lvl.size_bytes))
+            lo, hi = level_band(size, prev)
+            mixes: dict[str, dict] = {}
+            for p in self.points:
+                if lo <= p.nbytes <= hi:
+                    cell = mixes.setdefault(p.mix, {"gbps": 0.0, "n": 0})
+                    cell["gbps"] += p.gbps
+                    cell["n"] += 1
+            if mixes:
+                best = max(c["gbps"] / c["n"] for c in mixes.values())
+                for c in mixes.values():
+                    c["gbps"] /= c["n"]
+                    c["rel"] = c["gbps"] / best if best else float("nan")
+                    c["band"] = (lo, hi)
+                out[name] = mixes
+            if size:
+                prev = size
         return out
 
     # -- serialization ------------------------------------------------------

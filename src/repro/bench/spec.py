@@ -6,7 +6,10 @@ that product: a validated, hashable, JSON-round-trippable configuration that
 the Runner executes on any registered backend.  Knob -> paper mapping:
 
     sizes        C1  working-set sweep across the memory hierarchy
-    mixes        C2  instruction-mix ladder (see repro.bench.mixes)
+    mixes        C2  instruction-mix ladder (see repro.bench.mixes; incl. the
+                 parameterized rw_RtoW read/write-ratio family — validation
+                 resolves family members through the registry's get_mix, so a
+                 bad R:W surfaces as BenchSpecError before any timing)
     streams      C3  interleaved address streams (addressing-mode overhead)
     block_rows   C4  rows per load step (LD1D/LD2D/LD4D analogue)
     devices      Fig 4  working set spread over the first k mesh devices

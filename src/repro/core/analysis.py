@@ -13,7 +13,8 @@ from typing import Union
 
 import numpy as np
 
-from repro.bench.result import BenchResult
+from repro.bench.result import BenchResult, level_band  # noqa: F401  (band
+#   formula lives with the summarize view; re-exported here for legacy users)
 from repro.core.machine_model import HardwareSpec, MachineModel
 from repro.core.sweep import SweepResult
 
@@ -22,30 +23,16 @@ from repro.core.sweep import SweepResult
 Result = Union[BenchResult, SweepResult]
 
 
-def level_band(level_size: int | None, prev_size: int) -> tuple[float, float]:
-    """Working-set band that cleanly sits inside one level: (2x previous level,
-    0.5x this level); DRAM band is (2x last cache, inf)."""
-    lo = 2.0 * prev_size
-    hi = 0.5 * level_size if level_size else float("inf")
-    return lo, hi
-
-
 def attribute_levels(res: Result, hw: HardwareSpec) -> dict:
-    """level -> {mix: mean GB/s within the level's band}."""
-    out: dict[str, dict] = {}
-    prev = 4 * 2**10 // 2
-    for lvl in hw.levels:
-        lo, hi = level_band(lvl.size_bytes, prev)
-        mixes = {}
-        for mix in {p.mix for p in res.points}:
-            pts = [p.gbps for p in res.by_mix(mix) if lo <= p.nbytes <= hi]
-            if pts:
-                mixes[mix] = float(np.mean(pts))
-        if mixes:
-            out[lvl.name] = mixes
-        if lvl.size_bytes:
-            prev = lvl.size_bytes
-    return out
+    """level -> {mix: mean GB/s within the level's band}.
+
+    Thin view over ``BenchResult.summarize`` (where the banding now lives —
+    figure scripts call it directly); duck-typed so the legacy SweepResult
+    works too, since summarize only reads ``.points``.
+    """
+    summary = BenchResult.summarize(res, levels=hw.levels)
+    return {lvl: {m: c["gbps"] for m, c in mixes.items()}
+            for lvl, mixes in summary.items()}
 
 
 def mix_penalties(level_bw: dict) -> dict:

@@ -31,7 +31,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.bench.mixes import FMA_DEPTHS, MixDef
+from repro.bench.mixes import FMA_DEPTHS, RW_COMBINE_COEF, MixDef
 
 # legacy alias — the registry's MixDef is attribute-compatible with the old Mix
 Mix = MixDef
@@ -43,7 +43,8 @@ def mixes(fma_depths=FMA_DEPTHS) -> dict[str, Mix]:
     requested chain depths.  Mixes are declared exactly once, there."""
     from repro.bench.mixes import get_mix, registry
     out = {name: m for name, m in registry().items()
-           if m.supports("xla") and not name.startswith("fma_")}
+           if m.supports("xla") and not name.startswith("fma_")
+           and m.rw is None}     # parameterized families stay bench-only
     for k in fma_depths:
         out[f"fma_{k}"] = get_mix(f"fma_{k}")
     return out
@@ -155,6 +156,46 @@ def k_blocked_sum(x, rows: int, passes: int):
 
 
 @partial(jax.jit, static_argnames=("passes",))
+def k_rw(streams, outs, passes: int):
+    """The R:W ratio family: R read streams combined triad-style, the result
+    stored to W write streams (paper: store-path attribution — the relation
+    between loads and stores, not raw volume, sets the rate).
+
+    streams: tuple of R same-shape read buffers; outs: tuple of W write
+    buffers carried through the pass loop (each pass stores all W) — their
+    initial values are never read, only their shape/dtype, so callers may
+    alias one buffer for all W seeds.  A
+    self-dependence through the accumulator chains the passes (defeats
+    loop-invariant hoisting); per-write eps terms keep the W stores distinct.
+    rw_1to1 degenerates to ``copy``'s stream pattern, rw_2to1 to ``triad``'s.
+
+    Oracle caveat (the ``load_only`` situation in reverse): at W >= 2, XLA
+    is free to duplicate the R-stream combine into each output's fusion, so
+    the *real* read traffic can exceed the accounted R streams per pass —
+    XLA-level code cannot pin a value to exactly one materialization.  The
+    Pallas embodiment (kernels.membench._rw_kernel) has explicit refs and
+    moves exactly the accounted (R + W) streams; use it for
+    measurement-grade store-path numbers, this oracle for semantics and
+    accounting.
+    """
+    def body(_, carry):
+        outs, acc = carry
+        eps = (acc * 1e-30).astype(streams[0].dtype)
+        # the coefficient rides on the carried accumulator so the per-stream
+        # multiply (and the stream read feeding it) cannot be hoisted out of
+        # the while loop as loop-invariant — same discipline as _perturb
+        coef = jnp.asarray(RW_COMBINE_COEF, streams[0].dtype) + eps
+        v = streams[0] + eps
+        for s in streams[1:]:
+            v = v + coef * s
+        outs = tuple(v + jnp.asarray(w, v.dtype) * eps
+                     for w in range(len(outs)))
+        return (outs, acc + v.reshape(-1)[0].astype(jnp.float32))
+    outs, acc = jax.lax.fori_loop(0, passes, body, (outs, jnp.float32(0)))
+    return acc + sum(o.reshape(-1)[-1].astype(jnp.float32) for o in outs)
+
+
+@partial(jax.jit, static_argnames=("passes",))
 def k_triad(a, b, c, passes: int):
     """STREAM triad a = b + s*c with a self-dependence chaining the passes."""
     def body(_, carry):
@@ -178,4 +219,16 @@ def run_mix(mix_name: str, x, passes: int, w=None):
         return k_triad(jnp.zeros_like(x), x, x * 0.5, passes)
     if mix_name.startswith("fma_"):
         return k_fma(x, passes, int(mix_name.split("_")[1]))
+    if mix_name.startswith("rw_"):
+        # convenience path: companions built here, INSIDE any timing — the
+        # bench backends bind their own streams outside the timed call
+        from repro.bench.mixes import get_mix
+        reads, writes = get_mix(mix_name).rw
+        return k_rw(rw_streams(x, reads), (x,) * writes, passes)
     raise KeyError(mix_name)
+
+
+def rw_streams(x, reads: int) -> tuple:
+    """The R read streams of an rw mix: x plus R-1 scaled companions (each a
+    distinct buffer, so the kernel really issues R loads per element)."""
+    return (x,) + tuple(x * (0.5 ** r) for r in range(1, reads))

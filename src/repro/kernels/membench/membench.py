@@ -70,6 +70,19 @@ def _triad_kernel(b_ref, c_ref, o_ref):
     o_ref[...] = b_ref[...] + jnp.asarray(1.5, b_ref.dtype) * c_ref[...]
 
 
+def _rw_kernel(reads, writes, *refs):
+    """R:W ratio tile: fold R read tiles triad-style (v = s0 + c*s1 + ...),
+    store v to each of W output tiles — the same ratio the xla oracle (k_rw)
+    emits, inside one grid program.  refs: R in-refs then W out-refs."""
+    from repro.bench.mixes import RW_COMBINE_COEF
+    v = refs[0][...]
+    coef = jnp.asarray(RW_COMBINE_COEF, v.dtype)
+    for r in range(1, reads):
+        v = v + coef * refs[r][...]
+    for w in range(writes):
+        refs[reads + w][...] = v
+
+
 def _stream_index_map(streams: int, n_blocks: int):
     """Block visit order: i -> interleaved across `streams` equal segments.
     streams=1 is the sequential (single-pointer) walk."""
@@ -83,9 +96,11 @@ def _stream_index_map(streams: int, n_blocks: int):
 
 def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
                   block_rows: int = 128, streams: int = 1,
-                  interpret: bool = True, y=None):
+                  interpret: bool = True, y=None, ys=()):
     """x: (rows, 128) f32/bf16; returns scalar (load-family) or array (copy /
-    triad) output.  ``triad`` needs a second same-shape operand ``y``."""
+    triad) or tuple-of-arrays (rw family) output.  ``triad`` needs a second
+    same-shape operand ``y``; ``rw_RtoW`` needs its R-1 extra read streams as
+    ``ys`` and returns its W outputs as a tuple."""
     rows, lanes = x.shape
     assert rows % block_rows == 0, (rows, block_rows)
     n_blocks = rows // block_rows
@@ -94,7 +109,25 @@ def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
 
     in_specs = [pl.BlockSpec((block_rows, lanes), imap)]
     operands = [x]
-    base_mix = "fma" if mix.startswith("fma") else mix
+    base_mix = "fma" if mix.startswith("fma") else \
+        ("rw" if mix.startswith("rw_") else mix)
+
+    if base_mix == "rw":
+        # one grid program emitting R tile-loads + W tile-stores per step
+        from repro.bench.mixes import get_mix
+        reads, writes = get_mix(mix).rw
+        assert len(ys) == reads - 1, (mix, len(ys))
+        assert all(s.shape == x.shape for s in ys), mix
+        return pl.pallas_call(
+            functools.partial(_rw_kernel, reads, writes),
+            grid=(n_blocks,),
+            in_specs=in_specs * reads,
+            out_specs=tuple(pl.BlockSpec((block_rows, lanes), imap)
+                            for _ in range(writes)),
+            out_shape=tuple(jax.ShapeDtypeStruct(x.shape, x.dtype)
+                            for _ in range(writes)),
+            interpret=interpret,
+        )(x, *ys)
     if base_mix == "mxu":
         w = jnp.eye(lanes, dtype=x.dtype)
         in_specs.append(pl.BlockSpec((lanes, lanes), lambda i: (0, 0)))

@@ -34,6 +34,14 @@ def make_kernel(mix: str = "load_sum", depth: int = 8, block_rows: int = 128,
                                  interpret=interpret, y=y)
         return fn2
 
+    if mix.startswith("rw_"):
+        @jax.jit
+        def fnr(x, *ys):
+            return membench_call(x, mix=mix, depth=depth_eff,
+                                 block_rows=block_rows, streams=streams,
+                                 interpret=interpret, ys=ys)
+        return fnr
+
     @jax.jit
     def fn(x):
         return membench_call(x, mix=base_mix, depth=depth_eff,
@@ -72,6 +80,21 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
             _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
             return acc
         return fn2
+
+    if mix.startswith("rw_"):
+        @jax.jit
+        def fnr(x, *ys):
+            def body(_, carry):
+                x, acc = carry
+                outs = one(x, *ys)
+                # keep every write stream live: fold each output's first
+                # element into the chained accumulator
+                for o in outs:
+                    x, acc = _chain(x, o, acc)
+                return (x, acc)
+            _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+            return acc
+        return fnr
 
     @jax.jit
     def fn(x):

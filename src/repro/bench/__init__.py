@@ -8,7 +8,9 @@ kernels), one Runner owning the measurement discipline, versioned results:
                                  sizes=(32 * 2**10, 16 * 2**20)))
     res.to_json("sweep.json")
 
-CLI: ``python -m repro.bench {run,list-mixes,compare}``.
+CLI: ``python -m repro.bench {run,list-mixes,compare,launch}`` — ``launch``
+spawns N coordinated local processes (the ``distributed`` backend's
+single-machine multi-host simulation; see bench.distributed).
 
 Heavy submodules (backends pull in the kernel packages) load lazily so that
 ``repro.core`` modules can import the mix registry without a cycle.
@@ -29,6 +31,10 @@ _LAZY = {
     "get_backend": ("repro.bench.backends", "get_backend"),
     "register_backend": ("repro.bench.backends", "register_backend"),
     "available_backends": ("repro.bench.backends", "available_backends"),
+    # multi-process coordination (the `distributed` backend's plumbing)
+    "ensure_initialized": ("repro.bench.distributed", "ensure_initialized"),
+    "gather_result": ("repro.bench.distributed", "gather_result"),
+    "launch_local": ("repro.bench.distributed", "launch_local"),
 }
 
 __all__ = ["BenchSpec", "BenchSpecError", "BenchPoint", "BenchResult",

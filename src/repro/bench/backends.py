@@ -1,5 +1,6 @@
 """Pluggable benchmark backends: the XLA oracles, the Pallas embodiment, and
-the sharded multi-device backend (the paper's Figure-4 core-scaling study).
+the sharded / distributed multi-device backends (the paper's Figure-4
+core-scaling study, single-process and multi-process respectively).
 
 A Backend turns (BenchSpec, mix, working set, passes) into a zero-arg callable
 whose return value is the serialization point for timing.  Work accounting is
@@ -180,34 +181,39 @@ class XLABackend(_CaseBackend):
         return _bind_oracle_case(case, mix, x)
 
 
-class ShardedBackend(_CaseBackend):
-    """The working set spread over the first k devices of a 1-D mesh.
+class _MeshOracleBackend(_CaseBackend):
+    """Shared machinery for backends that run the instruction-mix oracles
+    per shard of a 1-D device mesh (``sharded`` on local devices,
+    ``distributed`` on the global devices of a multi-process run).
 
-    Reproduces the paper's Figure-4 core-count scaling study (aggregate
-    bandwidth vs cores until the HBM2 interface saturates): each device runs
-    the *same* instruction-mix oracle the xla backend runs, over its shard,
-    via ``shard_map`` — so every mix that runs on ``xla`` runs sharded, with
-    identical bytes/flops accounting by construction (the Runner reads both
-    from the shared registry).  ``BenchSpec(devices=k)`` picks the mesh size;
-    at ``devices=1`` this degenerates to the xla backend plus mesh overhead.
+    Subclasses choose the device pool (``_mesh_devices``) and how a host
+    buffer becomes a mesh-placed array (``_place``); ``make_case`` — the
+    shard_map wrapping of the *same* oracle kernels the xla backend runs —
+    is identical for both, so bytes/flops accounting parity across xla /
+    sharded / distributed holds by construction (the Runner reads accounting
+    from the shared mix registry, never from the backend).
     """
-    name = "sharded"
     multi_device = True
 
     def __init__(self):
         self._meshes: dict[int, object] = {}
 
     def supports(self, mix: MixDef) -> bool:
-        # mixes._BACKEND_ALIASES maps sharded -> xla (single source of truth)
+        # mixes._BACKEND_ALIASES maps sharded/distributed -> xla (single
+        # source of truth for which mixes the oracles implement)
         return mix.supports(self.name)
+
+    def _mesh_devices(self) -> list:
+        """The device pool the 1-D mesh draws from (first k are used)."""
+        import jax
+        return jax.devices()
 
     def _mesh(self, k: int):
         mesh = self._meshes.get(k)
         if mesh is None:
-            import jax
             import numpy as np
             from jax.sharding import Mesh
-            devs = jax.devices()
+            devs = self._mesh_devices()
             if k > len(devs):
                 raise BenchSpecError(
                     f"devices={k} exceeds the {len(devs)} visible device(s); "
@@ -250,19 +256,111 @@ class ShardedBackend(_CaseBackend):
         from jax.sharding import NamedSharding, PartitionSpec as P
         return NamedSharding(self._mesh(k), P("d", None))
 
+    def _place(self, a, sharding):
+        import jax
+        return jax.device_put(a, sharding)
+
     def prepare_buffer(self, spec, x):
         """One mesh placement per size — every mix's binding shares it."""
-        import jax
-        return jax.device_put(x, self._sharding(spec.devices))
+        return self._place(x, self._sharding(spec.devices))
 
     def bind_case(self, case, spec, mix, x):
         # companions live outside the timed call, placed like x (which
         # prepare_buffer already spread across the mesh)
-        import jax
         sharding = self._sharding(spec.devices)
         bufs = _mix_operands(mix, x,
-                             place=lambda a: jax.device_put(a, sharding))
+                             place=lambda a: self._place(a, sharding))
         return lambda: case(*bufs)
+
+
+class ShardedBackend(_MeshOracleBackend):
+    """The working set spread over the first k devices of a 1-D mesh.
+
+    Reproduces the paper's Figure-4 core-count scaling study (aggregate
+    bandwidth vs cores until the HBM2 interface saturates): each device runs
+    the *same* instruction-mix oracle the xla backend runs, over its shard,
+    via ``shard_map`` — so every mix that runs on ``xla`` runs sharded, with
+    identical bytes/flops accounting by construction (the Runner reads both
+    from the shared registry).  ``BenchSpec(devices=k)`` picks the mesh size;
+    at ``devices=1`` this degenerates to the xla backend plus mesh overhead.
+    """
+    name = "sharded"
+
+
+class DistributedBackend(_MeshOracleBackend):
+    """The sharded oracle-per-shard machinery over the **global** devices of
+    a multi-process run (``jax.distributed``) — the paper's Fig-4 scaling
+    study taken past one host.
+
+    The ``devices`` knob is unchanged: it counts *global* mesh devices, so a
+    spec that ran ``sharded`` on one 8-device host runs ``distributed`` on
+    two 4-device hosts byte-for-byte (same accounting, same per-shard
+    kernels; ``tests/test_bench_distributed.py`` enforces the parity).  Two
+    things differ from ``sharded``:
+
+    * buffer placement: a host-built working set becomes a *global* array
+      via ``jax.make_array_from_callback`` — each process materializes only
+      its addressable shards on device (``device_put`` can't target
+      non-addressable shards on the pinned toolchain).  Companions computed
+      *from* the placed buffer (triad's ``x * 0.5``, the rw streams) are
+      already global and pass through untouched.
+    * process roles: every process runs the identical SPMD measurement loop
+      (the trailing cross-shard ``.sum()`` in the compiled case is the
+      global serialization point each rep); afterwards
+      ``bench.distributed.gather_result`` merges the per-process timings
+      into one BenchResult on all processes and process 0 saves it.
+
+    Initialization (``bench.distributed.ensure_initialized``) must happen
+    before the jax backend comes up — the CLI's ``run``/``launch`` and
+    ``benchmarks/fig4_scaling.py --distributed`` do this for you.  In a
+    single-process context this backend degenerates to ``sharded`` exactly.
+    """
+    name = "distributed"
+
+    def _mesh_devices(self) -> list:
+        """Global devices, round-robin across processes — ``devices=k``
+        spreads the mesh as evenly as the process topology allows (k=2 on
+        2x2 hosts is one device per host, not two on host 0), so a Fig-4
+        sweep over intermediate counts exercises the interconnect instead
+        of a single host's slice of it."""
+        import jax
+        devs = jax.devices()
+        if jax.process_count() == 1:
+            return devs
+        by_proc: dict[int, list] = {}
+        for d in devs:
+            by_proc.setdefault(d.process_index, []).append(d)
+        pools = [by_proc[p] for p in sorted(by_proc)]
+        return [pool[i] for i in range(max(len(p) for p in pools))
+                for pool in pools if i < len(pool)]
+
+    def validate(self, spec: BenchSpec) -> None:
+        super().validate(spec)
+        import jax
+        if jax.process_count() > 1:
+            # SPMD needs every process inside the mesh: a process owning no
+            # shard has no addressable data and can't even represent the
+            # computation — fail with the fix, not an IndexError deep in
+            # placement
+            covered = {d.process_index
+                       for d in self._mesh_devices()[:spec.devices]}
+            missing = sorted(set(range(jax.process_count())) - covered)
+            if missing:
+                raise BenchSpecError(
+                    f"devices={spec.devices} leaves process(es) {missing} "
+                    f"with no mesh shard; use devices >= one per process "
+                    f"or launch fewer processes")
+
+    def _place(self, a, sharding):
+        import jax
+        if isinstance(a, jax.Array) and not a.is_fully_addressable:
+            return a        # already a global array living on the mesh
+        if jax.process_count() == 1:
+            return jax.device_put(a, sharding)
+        import numpy as np
+        host = np.asarray(a)
+        return jax.make_array_from_callback(host.shape, sharding,
+                                            lambda idx: host[idx])
 
 
 class PallasBackend(_CaseBackend):
@@ -329,6 +427,7 @@ def register_backend(backend: Backend) -> Backend:
 
 register_backend(XLABackend())
 register_backend(ShardedBackend())
+register_backend(DistributedBackend())
 register_backend(PallasBackend())
 
 

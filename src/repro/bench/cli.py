@@ -1,9 +1,14 @@
-"""``python -m repro.bench`` — run / list-mixes / compare.
+"""``python -m repro.bench`` — run / list-mixes / compare / launch.
 
     run         execute a BenchSpec (flags or --spec JSON), print + save the
-                schema-versioned result JSON
+                schema-versioned result JSON; under a multi-process launch
+                (REPRO_NUM_PROCESSES et al.) it initializes jax.distributed,
+                gathers timings across processes, and saves from process 0
     list-mixes  the shared mix registry with its bytes/flops accounting
     compare     the same spec on several backends, side by side
+    launch      spawn N coordinated local processes running ``run --backend
+                distributed`` with forced host devices — the single-machine
+                simulation of a multi-host Fig-4 scaling study
 """
 from __future__ import annotations
 
@@ -56,7 +61,8 @@ def _add_spec_flags(p: argparse.ArgumentParser):
                    help="path to a BenchSpec JSON (overrides other flags)")
     p.add_argument("--quick", action="store_true",
                    help="small sizes / few reps smoke preset")
-    p.add_argument("--backend", default="xla", help="xla | sharded | pallas")
+    p.add_argument("--backend", default="xla",
+                   help="xla | sharded | distributed | pallas")
     p.add_argument("--mixes", "--mix", default=None,
                    help="comma list, e.g. load_sum,copy,rw_3to1")
     p.add_argument("--sizes", default=None, help="comma list, K/M/G ok: 32K,2M")
@@ -69,8 +75,17 @@ def _add_spec_flags(p: argparse.ArgumentParser):
 
 
 def cmd_run(args) -> int:
+    # distributed init must precede the first jax.devices() call (spec
+    # validation touches the backend registry's meshes); a no-op outside a
+    # multi-process launch
+    from repro.bench import distributed as dist
+    dist.ensure_initialized()
     spec = _spec_from_args(args)
-    res = Runner().run(spec)
+    res = dist.gather_result(Runner().run(spec))
+    if not dist.is_primary():
+        print(f"# process {dist.process_index()}/{dist.process_count()} "
+              f"done ({len(res.points)} points gathered by process 0)")
+        return 0
     text = res.to_json(args.out)
     if args.out:
         for p in res.points:
@@ -143,12 +158,48 @@ def cmd_compare(args) -> int:
     return 1 if mismatch else 0
 
 
+def cmd_launch(args) -> int:
+    """Spawn N coordinated local processes running ``run`` with the same
+    spec flags (see bench.distributed.launch_local).  All children share one
+    argv — ``cmd_run`` gates the ``--out`` write on process 0, which holds
+    the gathered result; the others report and exit."""
+    from repro.bench import distributed as dist
+    if any(f == "--spec" or f.startswith("--spec=")
+           for f in args.worker_flags):
+        # a spec file short-circuits _spec_from_args, silently discarding
+        # the injected --backend/--devices below — the workers would run
+        # the file's backend single-process and the 'gathered' result would
+        # be wrong; demand explicit flags instead
+        raise BenchSpecError(
+            "launch does not accept --spec (the file's backend/devices "
+            "would override the injected distributed defaults); pass the "
+            "spec as explicit flags (--mixes/--sizes/--devices/...)")
+    worker = [sys.executable, "-m", "repro.bench", "run",
+              "--backend", args.backend] + list(args.worker_flags)
+    if not any(f == "--devices" or f.startswith("--devices=")
+               for f in args.worker_flags):
+        # default to the full simulated mesh: every process must own a mesh
+        # shard (the backend rejects a mesh that leaves a process out).
+        # Appended, so it must not shadow either user spelling — argparse
+        # takes the LAST occurrence
+        worker += ["--devices",
+                   str(args.processes * args.devices_per_process)]
+    if args.out:
+        worker += ["--out", args.out]
+    return dist.launch_local(worker, processes=args.processes,
+                             devices_per_process=args.devices_per_process,
+                             timeout=args.timeout or None)
+
+
 def main(argv=None) -> int:
+    # allow_abbrev everywhere: `launch --devices 4` must reach the workers
+    # as the spec's devices knob, not silently match --devices-per-process
     ap = argparse.ArgumentParser(prog="python -m repro.bench",
-                                 description=__doc__)
+                                 description=__doc__, allow_abbrev=False)
     sub = ap.add_subparsers(dest="cmd", required=True)
 
-    p_run = sub.add_parser("run", help="execute a BenchSpec")
+    p_run = sub.add_parser("run", help="execute a BenchSpec",
+                           allow_abbrev=False)
     _add_spec_flags(p_run)
     p_run.add_argument("--out", default=None, help="write result JSON here")
     p_run.set_defaults(fn=cmd_run)
@@ -156,13 +207,37 @@ def main(argv=None) -> int:
     p_list = sub.add_parser("list-mixes", help="show the mix registry")
     p_list.set_defaults(fn=cmd_list_mixes)
 
-    p_cmp = sub.add_parser("compare", help="same spec on several backends")
+    p_cmp = sub.add_parser("compare", help="same spec on several backends",
+                           allow_abbrev=False)
     _add_spec_flags(p_cmp)
     p_cmp.add_argument("--backends", default="xla,pallas")
     p_cmp.add_argument("--out", default=None)
     p_cmp.set_defaults(fn=cmd_compare)
 
-    args = ap.parse_args(argv)
+    p_launch = sub.add_parser(
+        "launch", help="N coordinated local processes (multi-host simulation)",
+        allow_abbrev=False)
+    p_launch.add_argument("--processes", type=int, default=2,
+                          help="simulated hosts (one process each)")
+    p_launch.add_argument("--devices-per-process", dest="devices_per_process",
+                          type=int, default=1,
+                          help="forced host devices per process; the global "
+                               "mesh has processes * this many devices")
+    p_launch.add_argument("--backend", default="distributed",
+                          help="worker backend (default: distributed)")
+    p_launch.add_argument("--timeout", type=float, default=None,
+                          help="seconds before stragglers are killed")
+    p_launch.add_argument("--out", default=None,
+                          help="gathered result JSON (written by process 0)")
+    p_launch.set_defaults(fn=cmd_launch, takes_worker_flags=True)
+
+    # `launch` forwards unknown flags (--mixes/--sizes/--devices/...) to its
+    # `run` workers verbatim; every other command treats extras as errors
+    args, extra = ap.parse_known_args(argv)
+    if getattr(args, "takes_worker_flags", False):
+        args.worker_flags = extra
+    elif extra:
+        ap.error(f"unrecognized arguments: {' '.join(extra)}")
     try:
         return args.fn(args)
     except (BenchSpecError, ValueError, KeyError, OSError) as e:

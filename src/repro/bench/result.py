@@ -8,17 +8,22 @@ that produced it, and machine metadata — a result file is a reproducible
 record, not just numbers.
 
 schema_version history: 1 = original point schema; 2 = points carry
-``devices`` (the multi-device knob).  Version-1 files load with the
-single-device default.
+``devices`` (the multi-device knob); 3 = points carry ``nbytes_requested``
+(the pre-rounding spec size, so ``by_size`` resolves requested sizes), the
+machine meta records process identity (``process_count`` /
+``process_index`` / ``local_device_count`` — the ``distributed`` backend),
+and unbounded ``summarize`` bands serialize as ``null`` instead of the
+non-JSON ``Infinity``.  Older files load unchanged with the defaults.
 """
 from __future__ import annotations
 
 import json
+import math
 import platform
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def level_band(level_size: int | None,
@@ -51,6 +56,8 @@ class BenchPoint:
     gbps: float
     gflops: float
     devices: int = 1            # schema v2; v1 files load with the default
+    nbytes_requested: int | None = None     # schema v3: the spec size before
+    #   buffers.working_set_shape rounding (None on pre-v3 files)
 
 
 @dataclass
@@ -66,7 +73,14 @@ class BenchResult:
         return [p for p in self.points if p.mix == mix]
 
     def by_size(self, nbytes: int) -> list[BenchPoint]:
-        return [p for p in self.points if p.nbytes == nbytes]
+        """Points at a working-set size — matching either the *real*
+        (rounded) byte count or the size as requested on the spec.
+        ``buffers.working_set_shape`` rounds requests to whole (8, 128)
+        tiles, so ``by_size(spec.sizes[i])`` historically returned ``[]``
+        for any size the rounding moved; points now carry both (schema v3)
+        and either resolves here."""
+        return [p for p in self.points
+                if p.nbytes == nbytes or p.nbytes_requested == nbytes]
 
     def baseline_relative(self, group_key=None, is_baseline=None
                           ) -> list[tuple[BenchPoint, float]]:
@@ -108,7 +122,10 @@ class BenchResult:
         Returns ``{level: {mix: {"gbps", "rel", "n", "band"}}}`` where
         ``rel`` is the mix's throughput relative to the best mix at that
         level (the paper's FADD/NOP/LOAD penalty ratios) and ``n`` the point
-        count inside the band.  Levels with no points are omitted.
+        count inside the band.  Levels with no points are omitted.  An
+        unbounded band's upper edge is ``None`` (NOT ``float("inf")``): a
+        summary stashed into ``meta`` must survive ``to_json``, and JSON has
+        no ``Infinity`` — consumers treat a ``None`` edge as open.
         """
         if levels is None:
             levels = (("all", None),)
@@ -129,7 +146,7 @@ class BenchResult:
                 for c in mixes.values():
                     c["gbps"] /= c["n"]
                     c["rel"] = c["gbps"] / best if best else float("nan")
-                    c["band"] = (lo, hi)
+                    c["band"] = (lo, None if math.isinf(hi) else hi)
                 out[name] = mixes
             if size:
                 prev = size
@@ -137,8 +154,14 @@ class BenchResult:
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
+        # meta is the free-form envelope (stashed summaries, skip maps, …):
+        # sanitize it so the emitted text is real JSON — Python's dump of
+        # inf/nan ("Infinity"/"NaN") is rejected by spec-compliant parsers.
+        # summarize() already emits None band edges; this catches everything
+        # else (e.g. a NaN ``rel`` from an all-zero level).
         return {"schema_version": self.schema_version,
-                "spec": self.spec, "machine": self.machine, "meta": self.meta,
+                "spec": self.spec, "machine": self.machine,
+                "meta": _json_finite(self.meta),
                 "points": [asdict(p) for p in self.points]}
 
     def to_json(self, path: str | Path | None = None) -> str:
@@ -164,8 +187,24 @@ class BenchResult:
         return cls.from_dict(json.loads(Path(path).read_text()))
 
 
+def _json_finite(obj):
+    """Deep-copy ``obj`` with non-finite floats replaced by None (the JSON
+    serialization of an unbounded/undefined value); containers are rebuilt
+    (tuples as lists, matching what a JSON round-trip produces anyway)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _json_finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_finite(v) for v in obj]
+    return obj
+
+
 def machine_meta() -> dict:
-    """Best-effort machine identity stamped into every result."""
+    """Best-effort machine identity stamped into every result.  Process
+    identity (schema v3) is 1-process/index-0 outside a ``jax.distributed``
+    run; ``bench.distributed.gather_result`` extends the merged result with
+    the per-host ``local_device_counts``."""
     import jax
     dev = jax.devices()[0]
     return {"hostname": platform.node(),
@@ -175,4 +214,7 @@ def machine_meta() -> dict:
             "jax": jax.__version__,
             "device_platform": dev.platform,
             "device_kind": getattr(dev, "device_kind", str(dev)),
-            "device_count": jax.device_count()}
+            "device_count": jax.device_count(),
+            "process_count": jax.process_count(),
+            "process_index": jax.process_index(),
+            "local_device_count": jax.local_device_count()}

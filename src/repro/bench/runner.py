@@ -102,7 +102,8 @@ class Runner:
                                    bytes_per_call=bpc, flops_per_call=fpc)
                 del fn      # drop companion buffers with the case binding
                 res.points.append(BenchPoint(
-                    nbytes=real_bytes, mix=mix.name, dtype=spec.dtype,
+                    nbytes=real_bytes, nbytes_requested=nbytes,
+                    mix=mix.name, dtype=spec.dtype,
                     backend=spec.backend, passes=passes, streams=spec.streams,
                     block_rows=spec.block_rows, reps=spec.reps,
                     bytes_per_call=bpc, flops_per_call=fpc,
@@ -133,6 +134,18 @@ class Runner:
         for r in results:
             mixes.extend(m for m in r.meta["mixes"] if m not in mixes)
         merged.meta["mixes"] = mixes
+        # dtype/reps likewise: results[0]'s scalar silently misdescribed a
+        # merge of disagreeing specs — stay scalar when uniform (the common
+        # knob sweep), union to a first-seen-ordered list when not (each
+        # point still carries its own dtype/reps regardless)
+        for key in ("dtype", "reps"):
+            vals: list = []
+            for r in results:
+                v = r.meta[key]
+                for item in (v if isinstance(v, list) else [v]):
+                    if item not in vals:
+                        vals.append(item)
+            merged.meta[key] = vals[0] if len(vals) == 1 else vals
         spec_dicts = [r.spec for r in results]
         if any(d != spec_dicts[0] for d in spec_dicts[1:]):
             merged.spec = {"spec_version": spec_dicts[0]["spec_version"],

@@ -26,19 +26,27 @@ class ScalingPoint:
 
 
 def scaling_curve(nbytes_per_device: int, mix: str = "load_sum",
-                  device_counts=None, passes: int = 8, reps: int = 8):
+                  device_counts=None, passes: int = 8, reps: int = 8,
+                  backend: str = "sharded"):
     """Weak-scaling sweep: ``nbytes_per_device * k`` total bytes on k devices,
-    speedup relative to the first device count measured."""
+    speedup relative to the first device count measured.  ``backend`` may be
+    ``"distributed"`` inside an initialized multi-process run (the counts
+    then span *global* devices and must cover every process; timings are
+    gathered so the curve is identical on all processes)."""
     import jax
 
     from repro.bench import BenchSpec, Runner
-    device_counts = device_counts or [d for d in (1, 2, 4, 8, 16, 32, 64)
-                                      if d <= jax.device_count()]
+    from repro.bench import distributed as dist
+    if device_counts is None:
+        device_counts = (dist.covering_device_counts()
+                         if backend == "distributed" else
+                         [d for d in dist.DEVICE_LADDER
+                          if d <= jax.device_count()])
     specs = [BenchSpec(mixes=(mix,), sizes=(nbytes_per_device * k,),
-                       backend="sharded", devices=k, passes=passes,
+                       backend=backend, devices=k, passes=passes,
                        reps=reps, warmup=2)
              for k in device_counts]
-    res = Runner().run_many(specs)
+    res = dist.gather_result(Runner().run_many(specs))
     return [ScalingPoint(devices=p.devices, mix=p.mix, nbytes_total=p.nbytes,
                          mean_s=p.mean_s, gbps=p.gbps, speedup=rel)
             for p, rel in res.baseline_relative(group_key=lambda p: p.mix)]

@@ -62,6 +62,13 @@ def time_fn(fn, *args, reps: int = 20, warmup: int = 3,
             ) -> TimingResult:
     """Time ``fn(*args)``; fn must return a jax array (serialization point)."""
     import jax
+    # BenchSpec validates these for Runner callers; direct callers (legacy
+    # sweep/autotune paths, notebooks) used to sail through to np.mean([]) —
+    # a RuntimeWarning and a NaN TimingResult instead of an error
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1: {reps}")
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0: {warmup}")
     if warmup:                 # warmup=0 is valid: first timed rep compiles
         out = fn(*args)
         for _ in range(warmup - 1):

@@ -306,6 +306,53 @@ def test_run_many_unions_meta_across_specs():
     assert res.meta["sizes"] == [16 * 2**10, 64 * 2**10]
     assert res.meta["mixes"] == ["load_sum", "copy"]
     assert {p.mix for p in res.points} == {"load_sum", "copy"}
+    # uniform dtype/reps stay scalar (the common knob sweep)
+    assert res.meta["dtype"] == "float32" and res.meta["reps"] == a.reps
+
+
+def test_run_many_unions_dtype_and_reps_when_specs_disagree():
+    """results[0]'s scalar dtype/reps silently misdescribed a merge of
+    disagreeing specs — they now union to first-seen-ordered lists."""
+    a = BenchSpec(mixes=("load_sum",), **TINY)
+    b = a.replace(dtype="bfloat16", reps=3)
+    res = Runner().run_many([a, b])
+    assert res.meta["dtype"] == ["float32", "bfloat16"]
+    assert res.meta["reps"] == [a.reps, 3]
+    # each point still carries its own knobs
+    assert {p.dtype for p in res.points} == {"float32", "bfloat16"}
+    assert {p.reps for p in res.points} == {a.reps, 3}
+
+
+def test_by_size_resolves_requested_and_real_sizes():
+    """working_set_shape rounds 50_000 B to whole (8, 128) f32 tiles;
+    by_size(spec size) used to return [] for any rounded size."""
+    spec = BenchSpec(mixes=("load_sum",), sizes=(50_000,), reps=2, warmup=1,
+                     passes=1)
+    res = Runner().run(spec)
+    (p,) = res.points
+    assert p.nbytes != 50_000 and p.nbytes_requested == 50_000
+    assert res.by_size(50_000) == [p] == res.by_size(p.nbytes)
+    # the envelope's sizes list (requested) now always resolves
+    assert all(res.by_size(s) for s in res.meta["sizes"])
+
+
+def test_summarize_band_and_meta_are_json_spec_compliant():
+    """An unbounded band edge must serialize as null, not Infinity — JSON
+    parsers outside Python reject non-finite literals."""
+    res = Runner().run(BenchSpec(mixes=("load_sum",), **TINY))
+    # an 8K L1 puts the 16K point in the unbounded DRAM band (lo = 16K)
+    res.meta["summary"] = res.summarize(levels=(("L1", 8 * 2**10),
+                                                ("DRAM", None)))
+    summary = res.meta["summary"]
+    assert summary["DRAM"]["load_sum"]["band"] == (16 * 2**10, None)
+    # belt and suspenders: even a raw inf/nan stashed into meta serializes
+    # as null rather than emitting non-JSON "Infinity"/"NaN" literals
+    res.meta["raw"] = {"inf": float("inf"), "nan": float("nan")}
+    text = res.to_json()
+    assert "Infinity" not in text and "NaN" not in text
+    back = json.loads(text)
+    assert back["meta"]["summary"]["DRAM"]["load_sum"]["band"][1] is None
+    assert back["meta"]["raw"] == {"inf": None, "nan": None}
 
 
 def test_compare_records_skipped():

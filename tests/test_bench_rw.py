@@ -257,7 +257,9 @@ def test_summarize_bands_means_and_rel():
     assert s["L1"]["copy"]["band"] == (4096.0, 32768.0)
     assert s["DRAM"]["load_sum"]["gbps"] == pytest.approx(10.0)
     assert s["DRAM"]["copy"]["rel"] == pytest.approx(0.5)
-    assert math.isinf(s["DRAM"]["copy"]["band"][1])
+    # unbounded band edge is None (JSON-serializable), NOT float("inf"):
+    # a summary stashed into meta must survive to_json as spec-compliant JSON
+    assert s["DRAM"]["copy"]["band"][1] is None
 
 
 def test_summarize_accepts_memlevel_objects_and_default_band():
@@ -297,6 +299,7 @@ def test_summarize_matches_legacy_attribute_levels():
 @pytest.mark.parametrize("fname,ver,devices", [
     ("result_v1.json", 1, 1),     # v1: no devices field -> default 1
     ("result_v2.json", 2, 2),
+    ("result_v3.json", 3, 4),     # v3: gathered 2-process distributed run
 ])
 def test_golden_result_roundtrip(fname, ver, devices):
     path = DATA / fname

@@ -61,6 +61,36 @@ def test_timing_harness():
     assert t.gbps > 0
 
 
+def test_time_fn_rejects_degenerate_repetition_counts():
+    """reps=0 used to sail through to np.mean([]) — a RuntimeWarning and a
+    NaN TimingResult instead of an error (BenchSpec validates its own path;
+    this guards direct callers of the harness)."""
+    fn = lambda: instruction_mix.run_mix("load_sum",
+                                         buffers.working_set(4096), 1)
+    with pytest.raises(ValueError, match="reps"):
+        timing.time_fn(fn, reps=0)
+    with pytest.raises(ValueError, match="reps"):
+        timing.time_fn(fn, reps=-1)
+    with pytest.raises(ValueError, match="warmup"):
+        timing.time_fn(fn, reps=1, warmup=-1)
+    # warmup=0 stays valid (first timed rep compiles)
+    t = timing.time_fn(fn, reps=1, warmup=0)
+    assert t.mean_s > 0
+
+
+def test_spec_validates_repetition_and_device_knobs():
+    """The BenchSpec layer of the same regression: degenerate knobs surface
+    at construction, before any timing is spent."""
+    from repro.bench import BenchSpec, BenchSpecError
+    with pytest.raises(BenchSpecError):
+        BenchSpec(reps=0)
+    with pytest.raises(BenchSpecError):
+        BenchSpec(warmup=-1)
+    with pytest.raises(BenchSpecError):
+        BenchSpec(devices=0)
+    assert BenchSpec(reps=1, warmup=0).devices == 1
+
+
 def test_mix_kernels_defeat_hoisting():
     """2x passes must take ~2x work: if XLA hoisted the body out of the loop,
     time would be flat in passes.  We check the *result* scales (the accumulator

@@ -17,14 +17,16 @@ import argparse
 
 from benchmarks.common import emit
 from repro.bench import BenchSpec, Runner
+from repro.core.buffers import hierarchy_grid
 
 STREAM_COUNTS = (1, 2, 4, 8)
 
 
 def main(quick: bool = False):
-    sizes = (32 * 2**10, 1 * 2**20, 32 * 2**20) if quick else \
-        (32 * 2**10, 256 * 2**10, 1 * 2**20, 8 * 2**20, 32 * 2**20,
-         128 * 2**20)
+    # shared grid constructor (core.buffers): the quick ladder, or a sparse
+    # log grid across the full hierarchy span — per-script size lists are gone
+    sizes = hierarchy_grid(quick=True) if quick else \
+        hierarchy_grid(per_decade=2)
     base = BenchSpec(mixes=("load_sum",), sizes=sizes,
                      reps=5 if quick else 10, warmup=2,
                      target_bytes=5e7 if quick else 2e8)

@@ -15,7 +15,7 @@ from pathlib import Path
 from benchmarks.common import emit
 from repro.bench import BenchSpec, Runner
 from repro.core import analysis
-from repro.core.buffers import sizes_logspace
+from repro.core.buffers import hierarchy_grid
 from repro.core.machine_model import detect_host
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
@@ -25,11 +25,11 @@ def spec_for(quick: bool) -> BenchSpec:
     if quick:
         return BenchSpec(
             mixes=("load_sum", "copy", "fma_8"),
-            sizes=(32 * 2**10, 256 * 2**10, 2 * 2**20, 16 * 2**20),
+            sizes=hierarchy_grid(quick=True),
             reps=5, warmup=2, target_bytes=5e7)
     return BenchSpec(
         mixes=("load_sum", "copy", "fma_2", "fma_8", "fma_32"),
-        sizes=tuple(sizes_logspace(16 * 2**10, 128 * 2**20, per_decade=6)),
+        sizes=hierarchy_grid(),
         reps=10, warmup=2, target_bytes=2e8)
 
 

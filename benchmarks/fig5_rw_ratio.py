@@ -18,7 +18,7 @@ from pathlib import Path
 from benchmarks.common import emit
 from repro.bench import RW_RATIOS, BenchSpec, Runner, rw_name
 from repro.bench.result import level_band
-from repro.core.buffers import sizes_logspace
+from repro.core.buffers import hierarchy_grid
 from repro.core.machine_model import detect_host
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
@@ -58,8 +58,7 @@ def spec_for(quick: bool = False, smoke: bool = False) -> BenchSpec:
         return BenchSpec(mixes=mixes, sizes=quick_sizes(detect_host().levels),
                          reps=3, warmup=1, target_bytes=2e7, tags=("fig5",))
     return BenchSpec(mixes=mixes,
-                     sizes=tuple(sizes_logspace(16 * 2**10, 64 * 2**20,
-                                                per_decade=4)),
+                     sizes=hierarchy_grid(hi=64 * 2**20, per_decade=4),
                      reps=10, warmup=2, target_bytes=2e8, tags=("fig5",))
 
 

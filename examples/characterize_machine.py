@@ -1,55 +1,51 @@
 """Standalone Arm-membench-style machine characterization (the paper's CLI).
 
-Runs the hierarchy sweep under multiple instruction mixes, attributes per-level
-bandwidths, reports mix penalties + the measured ridge point, probes per-device
-variance (straggler check), and saves a MachineModel JSON the framework's
-autotuner and roofline analyzer consume.
+Thin wrapper over ``repro.characterize``: adaptive fine-granularity sweep,
+change-point topology detection (no sysfs/documentation input), fitted
+machine model + report, plus the per-device straggler probe.  The heavy
+lifting — and the ``--smoke``/``--full`` presets — live in
+``python -m repro.bench characterize``; this example shows the library API.
 
     PYTHONPATH=src python examples/characterize_machine.py [--full]
 """
 import argparse
-import json
 from pathlib import Path
 
-from repro.bench import BenchSpec, Runner
-from repro.core import analysis
-from repro.core.buffers import sizes_logspace
+from repro.characterize import characterize, render_markdown
 from repro.core.machine_model import detect_host
 from repro.ft.stragglers import probe_devices
 
 
 def main(full: bool = False):
-    host = detect_host()
-    print(f"host: {host.name}")
-    for lvl in host.levels:
-        sz = f"{lvl.size_bytes}B" if lvl.size_bytes else "-"
-        print(f"  {lvl.name}: {sz}")
+    prior = detect_host()
+    print(f"sysfs prior: {prior.name} ({len(prior.levels)} levels — "
+          f"cross-checked below, not trusted)")
 
-    sizes = (sizes_logspace(16 * 2**10, 256 * 2**20, per_decade=6) if full
-             else [32 * 2**10, 256 * 2**10, 2 * 2**20, 16 * 2**20, 64 * 2**20])
-    mixes = (["load_sum", "copy", "fma_1", "fma_2", "fma_8", "fma_32", "fma_64"]
-             if full else ["load_sum", "copy", "fma_8", "fma_32"])
-    print(f"\nsweeping {len(sizes)} sizes x {len(mixes)} mixes ...")
-    spec = BenchSpec(mixes=tuple(mixes), sizes=tuple(sizes),
-                     reps=10 if full else 5, warmup=2,
-                     target_bytes=2e8 if full else 5e7)
-    res = Runner().run(spec)
-    model = analysis.build_machine_model(res, host)
+    if full:
+        kw = dict(coarse_per_decade=4, hi=256 * 2**20, reps=10, warmup=2,
+                  target_bytes=2e8, resolution=0.10)
+        mixes = ("load_sum", "copy", "fma_1", "fma_2", "fma_8", "fma_32",
+                 "fma_64")
+    else:
+        kw = dict(coarse_per_decade=3, reps=5, warmup=1, target_bytes=5e7,
+                  resolution=0.25, max_rounds=4)
+        mixes = ("load_sum", "copy", "fma_8", "fma_32")
+    model, sweep = characterize(mixes=mixes, primary=mixes[0], prior=prior,
+                                **kw)
+    print(render_markdown(model, sweep))
 
-    print("\n== per-level bandwidth x instruction mix ==")
-    print(analysis.format_table(model.level_bw, model.mix_penalty))
-    if model.ridge_flops_per_byte:
-        print(f"\nmeasured ridge point: {model.ridge_flops_per_byte:.1f} flop/B")
-    print("\n== per-device probe (straggler check) ==")
+    print("== per-device probe (straggler check) ==")
     for p in probe_devices(nbytes=1 * 2**20, passes=2, reps=3):
         flag = "  <-- STRAGGLER" if p.is_straggler else ""
         print(f"  {p.device}: {p.gbps:.2f} GB/s (z={p.z_score:+.2f}){flag}")
 
     out = Path("artifacts")
     out.mkdir(exist_ok=True)
-    model.to_json(out / "machine_model_host.json")
-    res.to_json(out / "characterize_sweep.json")
-    print(f"\nsaved: {out}/machine_model_host.json")
+    model.to_json(out / "fitted_machine_model.json")
+    model.to_machine_model().to_json(out / "machine_model_host.json")
+    sweep.result.to_json(out / "characterize_sweep.json")
+    print(f"\nsaved: {out}/fitted_machine_model.json (+ legacy "
+          f"machine_model_host.json, characterize_sweep.json)")
 
 
 if __name__ == "__main__":

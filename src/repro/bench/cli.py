@@ -1,4 +1,5 @@
-"""``python -m repro.bench`` — run / list-mixes / compare / launch.
+"""``python -m repro.bench`` — run / list-mixes / compare / characterize /
+launch.
 
     run         execute a BenchSpec (flags or --spec JSON), print + save the
                 schema-versioned result JSON; under a multi-process launch
@@ -6,6 +7,8 @@
                 gathers timings across processes, and saves from process 0
     list-mixes  the shared mix registry with its bytes/flops accounting
     compare     the same spec on several backends, side by side
+    characterize  adaptive fine-granularity sweep -> detected topology ->
+                FittedMachineModel JSON + markdown report (repro.characterize)
     launch      spawn N coordinated local processes running ``run --backend
                 distributed`` with forced host devices — the single-machine
                 simulation of a multi-host Fig-4 scaling study
@@ -158,6 +161,50 @@ def cmd_compare(args) -> int:
     return 1 if mismatch else 0
 
 
+def cmd_characterize(args) -> int:
+    """Measurement-driven machine characterization: adaptive fine-granularity
+    sweep -> change-point detection -> FittedMachineModel + report (see
+    repro.characterize).  ``--smoke`` is the CI fast preset (coarse grid,
+    one refinement round); ``--full`` the paper-grade sweep."""
+    from repro.characterize import characterize, render_markdown, write_report
+    from repro.core.machine_model import get_spec
+
+    kw: dict = dict(backend=args.backend, resolution=args.resolution,
+                    max_rounds=args.max_rounds)
+    if args.smoke:
+        # copy drives detection: its store stream keeps the big-size points
+        # memory-bound on every host we've measured, so the cache cliffs are
+        # sharpest where the coarse grid is thinnest
+        kw.update(lo=16 * 2**10, hi=64 * 2**20, coarse_per_decade=2,
+                  resolution=max(args.resolution, 0.35), max_rounds=2,
+                  reps=5, warmup=1, target_bytes=3e7)
+        mixes: tuple = ("copy", "load_sum")
+    elif args.full:
+        kw.update(coarse_per_decade=4, reps=10, warmup=2, target_bytes=2e8,
+                  hi=256 * 2**20)
+        mixes = ("load_sum", "copy", "fma_1", "fma_2", "fma_8", "fma_32",
+                 "fma_64")
+    else:
+        kw.update(coarse_per_decade=3, reps=5, warmup=1, target_bytes=5e7)
+        mixes = ("load_sum", "copy", "fma_8", "fma_32")
+    if args.mixes:
+        mixes = tuple(args.mixes.split(","))
+    if args.interpret is not None:
+        kw["spec_kw"] = {"interpret": args.interpret}
+
+    model, sweep = characterize(mixes=mixes, primary=mixes[0], **kw)
+    documented = get_spec(args.compare) if args.compare else None
+    print(render_markdown(model, sweep, documented))
+    if args.out:
+        model.to_json(args.out)
+        print(f"# saved fitted model (schema v{model.schema_version}, "
+              f"{len(model.levels)} levels) -> {args.out}")
+    if args.report:
+        write_report(model, args.report, sweep, documented)
+        print(f"# saved report -> {args.report}")
+    return 0
+
+
 def cmd_launch(args) -> int:
     """Spawn N coordinated local processes running ``run`` with the same
     spec flags (see bench.distributed.launch_local).  All children share one
@@ -213,6 +260,33 @@ def main(argv=None) -> int:
     p_cmp.add_argument("--backends", default="xla,pallas")
     p_cmp.add_argument("--out", default=None)
     p_cmp.set_defaults(fn=cmd_compare)
+
+    p_chz = sub.add_parser(
+        "characterize",
+        help="adaptive sweep -> detected topology -> fitted machine model",
+        allow_abbrev=False)
+    mode = p_chz.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="CI preset: coarse grid, minimal refinement")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-grade sweep (slow)")
+    p_chz.add_argument("--backend", default="xla",
+                       help="measurement backend (xla | pallas | sharded)")
+    p_chz.add_argument("--resolution", type=float, default=0.10,
+                       help="target relative width of capacity brackets")
+    p_chz.add_argument("--max-rounds", dest="max_rounds", type=int, default=8)
+    p_chz.add_argument("--mixes", "--mix", default=None,
+                       help="comma list; first is the detection-driving mix")
+    p_chz.add_argument("--interpret", type=lambda s: s.lower() != "false",
+                       default=None, help="Pallas interpret mode override")
+    p_chz.add_argument("--compare", default=None,
+                       help="documented spec to diff against (e.g. "
+                            "fujitsu-a64fx, host)")
+    p_chz.add_argument("--out", default=None,
+                       help="write the FittedMachineModel JSON here")
+    p_chz.add_argument("--report", default=None,
+                       help="write a markdown (.md) or JSON (.json) report")
+    p_chz.set_defaults(fn=cmd_characterize)
 
     p_launch = sub.add_parser(
         "launch", help="N coordinated local processes (multi-host simulation)",

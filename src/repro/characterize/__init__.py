@@ -1,0 +1,42 @@
+"""repro.characterize — measurement-driven machine characterization.
+
+Turns raw ``repro.bench`` results into a fitted machine model, the way the
+paper turns its sweeps into §5-§6 conclusions:
+
+    from repro.characterize import characterize, render_markdown
+    model, sweep = characterize()         # adaptive sweep + detection + fit
+    print(render_markdown(model, sweep))
+    model.to_json("fitted_machine_model.json")
+
+Layers (measurement -> inference):
+
+* ``adaptive``  — boundary-bisecting refinement driver over ``bench.Runner``
+  (the paper's fine spatial granularity at a fraction of a dense grid)
+* ``detect``    — change-point/plateau detection: levels, capacities and
+  bandwidths *with confidence intervals*, no sysfs/documentation input
+* ``fit``       — schema-versioned ``FittedMachineModel``; registers into
+  the ``core.machine_model`` spec registry; consumed by ``roofline.analyze``
+  and ``core.autotune``; ``compare_to`` reproduces the Table-1 deltas
+* ``report``    — markdown/JSON rendering (also:
+  ``python -m repro.bench characterize``)
+"""
+from repro.characterize.adaptive import (AdaptiveSweep,  # noqa: F401
+                                         DEFAULT_RESOLUTION, adaptive_sweep)
+from repro.characterize.detect import (Boundary, DetectedLevel,  # noqa: F401
+                                       Detection, detect_from_result,
+                                       detect_levels)
+from repro.characterize.fit import (FITTED_SCHEMA_VERSION,  # noqa: F401
+                                    FittedMachineModel, LevelFit,
+                                    characterize, crosscheck_prior,
+                                    fit_from_result, probe_sizes)
+from repro.characterize.report import (render_json,  # noqa: F401
+                                       render_markdown, write_report)
+
+__all__ = [
+    "AdaptiveSweep", "DEFAULT_RESOLUTION", "adaptive_sweep",
+    "Boundary", "DetectedLevel", "Detection", "detect_from_result",
+    "detect_levels",
+    "FITTED_SCHEMA_VERSION", "FittedMachineModel", "LevelFit",
+    "characterize", "crosscheck_prior", "fit_from_result", "probe_sizes",
+    "render_json", "render_markdown", "write_report",
+]

@@ -68,23 +68,20 @@ def ridge_depth(res: Result, band: tuple[float, float],
 
 
 def build_machine_model(res: Result, hw: HardwareSpec) -> MachineModel:
-    level_bw = attribute_levels(res, hw)
-    pen = mix_penalties(level_bw)
-    # ridge measured in the innermost level band (cache-resident)
-    first = hw.levels[0]
-    band = level_band(first.size_bytes, 2 * 2**10)
-    k = ridge_depth(res, band)
-    ridge = None
-    if k is not None:
-        # flops/byte at the crossover: 2k flops per loaded element
-        itemsize = 4 if res.meta.get("dtype", "float32") == "float32" else 2
-        ridge = 2.0 * k / itemsize
-    return MachineModel(
-        hardware={"name": hw.name,
-                  "levels": [(l.name, l.size_bytes, l.read_bw) for l in hw.levels]},
-        level_bw=level_bw,
-        ridge_flops_per_byte=ridge,
-        mix_penalty=pen)
+    """Thin wrapper over ``repro.characterize.fit`` in *documented-banding*
+    mode: per-mix bandwidths attributed inside ``hw``'s level bands, ridge
+    measured in the innermost band.  For measurement-*detected* topology
+    (no ``hw`` input at all), use ``repro.characterize.characterize`` /
+    ``fit_from_result`` directly — they return the richer
+    ``FittedMachineModel`` this legacy schema downgrades from."""
+    from repro.characterize.fit import fit_from_result
+    model = fit_from_result(res, hw=hw, name=hw.name).to_machine_model()
+    # legacy contract: hardware carries the DOCUMENTED levels verbatim
+    # (sizes + documented read_bw), not the measured-bandwidth view
+    model.hardware = {"name": hw.name,
+                      "levels": tuple((l.name, l.size_bytes, l.read_bw)
+                                      for l in hw.levels)}
+    return model
 
 
 def format_table(level_bw: dict, pen: dict) -> str:

@@ -55,10 +55,46 @@ def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
                       best_rows=best, table=table)
 
 
+def _innermost_capacity(model) -> int | None:
+    """Innermost-level capacity from any machine-model flavor: a
+    ``characterize.FittedMachineModel`` (detected), a ``HardwareSpec``
+    (documented table), or a path to a fitted-model JSON."""
+    if model is None:
+        return None
+    if isinstance(model, (str, Path)):
+        from repro.characterize.fit import FittedMachineModel
+        model = FittedMachineModel.from_json(model)
+    cap = getattr(model, "innermost_capacity", None)   # FittedMachineModel
+    if cap:
+        return int(cap)
+    for lvl in getattr(model, "levels", ()):           # HardwareSpec
+        size = getattr(lvl, "size_bytes", None)
+        if size:
+            return int(size)
+    return None
+
+
+def model_block_rows(model, lanes: int = 128, itemsize: int = 4,
+                     default: int = 128) -> int:
+    """Largest candidate row count whose block fits in HALF the machine's
+    innermost level (detected by ``repro.characterize`` or documented) —
+    half, so the block plus its accumulator/companion stream stay resident.
+    """
+    cap = _innermost_capacity(model)
+    if not cap:
+        return default
+    fitting = [r for r in CANDIDATE_ROWS if r * lanes * itemsize <= cap / 2]
+    return max(fitting, default=CANDIDATE_ROWS[0])
+
+
 def choose_block_rows(nbytes: int, cache_path: str | Path | None = None,
-                      default: int = 128) -> int:
-    """Consult a cached tune result; fall back to the v5e-sensible default."""
+                      default: int = 128, model=None) -> int:
+    """Consult a cached tune result; else size blocks against a machine
+    model's measured innermost capacity (``model``: FittedMachineModel,
+    HardwareSpec, or fitted-model JSON path); else the v5e default."""
     if cache_path and Path(cache_path).exists():
         d = json.loads(Path(cache_path).read_text())
         return int(d.get("best_rows", default))
+    if model is not None:
+        return model_block_rows(model, default=default)
     return default

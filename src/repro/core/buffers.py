@@ -63,3 +63,49 @@ def sizes_logspace(lo: int, hi: int, per_decade: int = 8) -> list[int]:
     n = max(2, int(np.ceil((np.log10(hi) - np.log10(lo)) * per_decade)))
     out = np.unique(np.geomspace(lo, hi, n).astype(np.int64))
     return [int(x) for x in out]
+
+
+# --------------------------------------------------------------------------
+# shared sweep grids — ONE grid constructor for the figure scripts and the
+# adaptive characterization driver (previously every script carried its own
+# size list, and no two agreed on the span)
+# --------------------------------------------------------------------------
+
+#: canonical hierarchy span: below the smallest L1d the paper studies up to
+#: decisively DRAM-resident on every host we run on
+HIERARCHY_SPAN = (16 * 2**10, 128 * 2**20)
+
+#: the fixed quick/smoke ladder: one size per typical level (L1/L2/LLC/DRAM)
+QUICK_SIZES = (32 * 2**10, 256 * 2**10, 2 * 2**20, 16 * 2**20)
+
+
+def snap_sizes(sizes, dtype=jnp.float32, lanes: int = 128) -> list[int]:
+    """Requested byte counts -> the *real* working-set sizes
+    ``working_set`` would allocate, deduplicated and sorted.  Two requests
+    that round to the same (rows, lanes) tile are one measurement — the
+    adaptive driver relies on this to avoid re-timing a size it already has
+    (and to notice when a bisection bracket is below tile resolution)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    out = set()
+    for s in sizes:
+        rows, l = working_set_shape(int(s), dtype, lanes)
+        out.add(rows * l * itemsize)
+    return sorted(out)
+
+
+def size_grid(lo: int = HIERARCHY_SPAN[0], hi: int = HIERARCHY_SPAN[1],
+              per_decade: int = 6, dtype=jnp.float32) -> list[int]:
+    """Log-spaced grid snapped to real working-set sizes (the grid every
+    sweep actually measures; ``sizes_logspace`` kept as the raw generator)."""
+    return snap_sizes(sizes_logspace(lo, hi, per_decade), dtype=dtype)
+
+
+def hierarchy_grid(quick: bool = False, lo: int = HIERARCHY_SPAN[0],
+                   hi: int = HIERARCHY_SPAN[1], per_decade: int = 6
+                   ) -> tuple[int, ...]:
+    """The canonical hierarchy-sweep working-set grid (fig scripts, the
+    characterize driver's coarse round).  ``quick`` returns the fixed
+    one-size-per-level ladder shared by every ``--quick`` mode."""
+    if quick:
+        return QUICK_SIZES
+    return tuple(size_grid(lo, hi, per_decade))

@@ -5,13 +5,29 @@ and measured sweep results; feeds the roofline analyzer and the kernel
 autotuner.  TPU v5e constants come from the assignment; the host entry is
 whatever this container measures (the benchmark proves itself on the machine it
 runs on, exactly like the paper's three Arm systems).
+
+Conventions:
+
+* ``peak_flops=None`` / ``read_bw=None`` mean *undocumented* (the paper's
+  Table 1 leaves several cells blank); ``0.0`` is reserved for a measured
+  zero, which never occurs for a documented peak.
+* Documented specs live in a name-keyed registry (``register_spec`` /
+  ``get_spec``) so measurement-derived models (``repro.characterize``) can
+  register alongside the static tables and be looked up by the same name.
+* ``MachineModel`` JSON carries ``model_schema_version``; v1 files (written
+  before versioning) load unchanged.  ``hardware["levels"]`` is canonicalized
+  to tuples-of-tuples on construction, so ``to_json``/``from_json`` round-trip
+  to an *equal* object (the old code silently returned lists after a reload).
 """
 from __future__ import annotations
 
 import json
+import re
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 from typing import Optional
+
+MODEL_SCHEMA_VERSION = 2    # 1 = unversioned seed files (list levels, no key)
 
 
 @dataclass(frozen=True)
@@ -24,7 +40,7 @@ class MemLevel:
 @dataclass(frozen=True)
 class HardwareSpec:
     name: str
-    peak_flops: float              # documented peak FLOP/s (per chip / core set)
+    peak_flops: Optional[float]    # documented peak FLOP/s; None = undocumented
     levels: tuple[MemLevel, ...]
     link_bw: Optional[float] = None  # interconnect B/s per link
     frequency_hz: Optional[float] = None
@@ -50,14 +66,14 @@ A64FX = HardwareSpec(
             MemLevel("HBM2", 32 * 2**30, 921.6e9 / 48)),
     frequency_hz=1.8e9, notes="paper Table 1 (per-core cache BW, per-socket DRAM)")
 ALTRA = HardwareSpec(
-    name="ampere-altra-q80-30", peak_flops=None or 0.0,
+    name="ampere-altra-q80-30", peak_flops=None,   # Table 1 leaves it blank
     levels=(MemLevel("L1d", 64 * 2**10, 96e9),
             MemLevel("L2", 1 * 2**20, None),
             MemLevel("L3", 32 * 2**20, None),
             MemLevel("DRAM", 512 * 2**30, 204.8e9 / 80)),
     frequency_hz=3e9, notes="paper Table 1")
 THUNDERX2 = HardwareSpec(
-    name="marvell-thunderx2", peak_flops=0.0,
+    name="marvell-thunderx2", peak_flops=None,     # Table 1 leaves it blank
     levels=(MemLevel("L1d", 32 * 2**10, 64e9),
             MemLevel("L2", 256 * 2**10, None),
             MemLevel("L3", 28 * 2**20, None),
@@ -65,27 +81,110 @@ THUNDERX2 = HardwareSpec(
     frequency_hz=2e9, notes="paper Table 1")
 
 
-def detect_host() -> HardwareSpec:
+# --------------------------------------------------------------------------
+# spec registry — documented tables and measurement-derived models share one
+# namespace, so consumers ask for a machine by name and get whichever exists
+# --------------------------------------------------------------------------
+
+_SPECS: dict[str, HardwareSpec] = {}
+
+
+def register_spec(spec: HardwareSpec, overwrite: bool = False) -> HardwareSpec:
+    if spec.name in _SPECS and not overwrite:
+        raise ValueError(f"spec {spec.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _SPECS[spec.name] = spec
+    return spec
+
+
+def get_spec(name: str) -> HardwareSpec:
+    if name == "host":          # always-fresh sysfs probe, never cached
+        return detect_host()
+    try:
+        return _SPECS[name]
+    except KeyError:
+        raise KeyError(f"unknown machine spec {name!r}; "
+                       f"registered: {sorted(_SPECS)} + 'host'") from None
+
+
+def available_specs() -> list[str]:
+    return sorted(_SPECS)
+
+
+for _spec in (TPU_V5E, A64FX, ALTRA, THUNDERX2):
+    register_spec(_spec)
+
+
+# --------------------------------------------------------------------------
+# host topology from sysfs — a PRIOR, not ground truth: repro.characterize
+# cross-checks these sizes against measured boundaries (paper: documentation
+# and measurement disagree often enough to be worth a column)
+# --------------------------------------------------------------------------
+
+_SIZE_RE = re.compile(r"^\s*(\d+)\s*([a-z]?)(?:i?b)?\s*$", re.IGNORECASE)
+_SIZE_MULT = {"": 1, "k": 2**10, "m": 2**20, "g": 2**30}
+
+
+def parse_cache_size(text: str) -> int:
+    """'64K' / '64KiB' / '1024 kB' / '8m' / '65536' -> bytes.
+
+    sysfs nominally emits '<n>K' but kernels and vendor drivers have shipped
+    lowercase and 'KiB'-suffixed variants; all of them parse here, anything
+    else raises ValueError.
+    """
+    m = _SIZE_RE.match(text)
+    if not m:
+        raise ValueError(f"unparseable cache size {text!r}")
+    mult = _SIZE_MULT.get(m.group(2).lower())
+    if mult is None:
+        raise ValueError(f"unknown size suffix in {text!r}")
+    return int(m.group(1)) * mult
+
+
+def detect_host(base: str | Path = "/sys/devices/system/cpu/cpu0/cache"
+                ) -> HardwareSpec:
     """Best-effort host cache topology from sysfs (sizes only; BW unmeasured
-    until the sweep runs — the paper's 'documentation unavailable' case)."""
-    levels = []
-    base = Path("/sys/devices/system/cpu/cpu0/cache")
-    if base.exists():
+    until the sweep runs — the paper's 'documentation unavailable' case).
+
+    Hardened: size suffixes parse case-insensitively incl. 'KiB' forms,
+    duplicate index entries for the same (level, size) collapse to one
+    MemLevel (some kernels expose unified caches under several indices), and
+    a missing ``/sys`` tree (macOS, stripped containers) degrades to a
+    DRAM-only spec instead of raising.  The result is a *prior*:
+    ``repro.characterize`` detects the real boundaries from measurement and
+    reports where the two disagree.
+    """
+    levels: list[MemLevel] = []
+    seen: set[tuple[str, int]] = set()
+    base = Path(base)
+    sysfs_found = base.exists()
+    if sysfs_found:
         for idx in sorted(base.glob("index*")):
             try:
                 lvl = (idx / "level").read_text().strip()
-                typ = (idx / "type").read_text().strip()
-                size = (idx / "size").read_text().strip()
-                if typ == "Instruction":
-                    continue
-                mult = {"K": 2**10, "M": 2**20}.get(size[-1], 1)
-                nb = int(size[:-1]) * mult if size[-1] in "KM" else int(size)
-                levels.append(MemLevel(f"L{lvl}", nb, None))
+                typ = (idx / "type").read_text().strip().lower()
+                nb = parse_cache_size((idx / "size").read_text().strip())
             except (OSError, ValueError):
                 continue
+            if typ == "instruction":
+                continue
+            key = (f"L{lvl}", nb)
+            if key in seen:     # duplicate index entry for the same cache
+                continue
+            seen.add(key)
+            levels.append(MemLevel(f"L{lvl}", nb, None))
+    levels.sort(key=lambda l: (l.size_bytes, l.name))
     levels.append(MemLevel("DRAM", None, None))
-    return HardwareSpec(name="host-cpu", peak_flops=0.0, levels=tuple(levels),
-                        notes="sizes from sysfs; bandwidths measured by sweep")
+    return HardwareSpec(
+        name="host-cpu", peak_flops=None, levels=tuple(levels),
+        notes="sizes from sysfs (prior only); bandwidths measured by sweep"
+              if sysfs_found else
+              "sysfs unavailable; topology must come from measurement")
+
+
+def _canon_levels(levels) -> tuple[tuple, ...]:
+    """[(name, size, bw), ...] in any list/tuple nesting -> tuple of tuples."""
+    return tuple(tuple(l) for l in levels)
 
 
 @dataclass
@@ -95,10 +194,27 @@ class MachineModel:
     level_bw: dict = field(default_factory=dict)   # level -> {mix: GB/s}
     ridge_flops_per_byte: Optional[float] = None
     mix_penalty: dict = field(default_factory=dict)  # mix -> relative to best
+    model_schema_version: int = MODEL_SCHEMA_VERSION
+
+    def __post_init__(self):
+        # canonical levels: a freshly built model and a JSON-reloaded one
+        # compare equal (json turns tuples into lists; we turn them back)
+        if isinstance(self.hardware, dict) and "levels" in self.hardware:
+            self.hardware = {**self.hardware,
+                             "levels": _canon_levels(self.hardware["levels"])}
 
     def to_json(self, path):
         Path(path).write_text(json.dumps(asdict(self), indent=2, default=str))
 
     @staticmethod
+    def from_dict(d: dict) -> "MachineModel":
+        d = dict(d)
+        ver = d.pop("model_schema_version", 1)   # v1: files without the key
+        if ver > MODEL_SCHEMA_VERSION:
+            raise ValueError(f"machine-model schema {ver} newer than "
+                             f"supported {MODEL_SCHEMA_VERSION}")
+        return MachineModel(**d, model_schema_version=ver)
+
+    @staticmethod
     def from_json(path) -> "MachineModel":
-        return MachineModel(**json.loads(Path(path).read_text()))
+        return MachineModel.from_dict(json.loads(Path(path).read_text()))

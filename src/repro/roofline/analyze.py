@@ -145,15 +145,55 @@ def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
     return ops
 
 
-def analyze(compiled, model_flops: float | None = None) -> dict:
-    """Full §Roofline record for one compiled (arch x shape x mesh) cell."""
+def machine_constants(machine) -> dict:
+    """Roofline constants from any machine-model flavor, for RooflineTerms.
+
+    Accepts a ``characterize.FittedMachineModel`` (measured: ``peak_flops``
+    / ``hbm_bw`` properties), a ``core.machine_model.HardwareSpec``
+    (documented: outermost level ``read_bw`` + ``link_bw``), or a registry
+    name string (``core.machine_model.get_spec``).  Constants the model
+    does not know (None = undocumented/unmeasured) keep the v5e defaults —
+    callers can see which were overridden in the returned dict.
+    """
+    if machine is None:
+        return {}
+    if isinstance(machine, str):
+        from repro.core.machine_model import get_spec
+        machine = get_spec(machine)
+    out = {}
+    peak = getattr(machine, "peak_flops", None)
+    if peak:
+        out["peak_flops"] = float(peak)
+    hbm = getattr(machine, "hbm_bw", None)      # FittedMachineModel (measured)
+    if hbm is None:                             # HardwareSpec (documented)
+        levels = getattr(machine, "levels", ())
+        if levels:
+            hbm = getattr(levels[-1], "read_bw", None)
+    if hbm:
+        out["hbm_bw"] = float(hbm)
+    ici = getattr(machine, "link_bw", None)
+    if ici:
+        out["ici_bw"] = float(ici)
+    return out
+
+
+def analyze(compiled, model_flops: float | None = None,
+            machine=None) -> dict:
+    """Full §Roofline record for one compiled (arch x shape x mesh) cell.
+
+    ``machine`` (optional) replaces the static v5e constants with a machine
+    model's — pass the ``FittedMachineModel`` that ``repro.characterize``
+    measured on this very machine, a documented ``HardwareSpec``, or a spec
+    registry name; see ``machine_constants``."""
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):   # jax 0.4.x: one dict per computation
         cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(compiled.as_text())
-    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, collectives=colls)
+    mc = machine_constants(machine)
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, collectives=colls,
+                          **mc)
     mem = compiled.memory_analysis()
     out = {
         **terms.summary(),
@@ -170,6 +210,9 @@ def analyze(compiled, model_flops: float | None = None) -> dict:
     if model_flops is not None:
         out["model_flops"] = model_flops
         out["useful_flop_ratio"] = model_flops / flops if flops else 0.0
+    if machine is not None:
+        out["machine_model"] = getattr(machine, "name", str(machine))
+        out["machine_constants"] = mc
     return out
 
 

@@ -1,0 +1,542 @@
+"""repro.characterize: detection on synthetic curves with known knees,
+adaptive-driver convergence/economics, model fitting + serialization,
+machine_model schema/registry/detect_host satellites, and consumer wiring
+(roofline + autotune accept fitted models)."""
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.characterize import (FittedMachineModel, adaptive_sweep,
+                                characterize, crosscheck_prior,
+                                detect_from_result, detect_levels,
+                                fit_from_result, probe_sizes, render_markdown)
+from repro.core.machine_model import (A64FX, ALTRA, THUNDERX2,
+                                      MODEL_SCHEMA_VERSION, HardwareSpec,
+                                      MachineModel, MemLevel, available_specs,
+                                      detect_host, get_spec,
+                                      parse_cache_size, register_spec)
+
+DATA = Path(__file__).parent / "data"
+
+
+# ---------------------------------------------------------------------------
+# synthetic machines — ground truth the detector must recover
+# ---------------------------------------------------------------------------
+
+def staircase(levels):
+    """[(capacity|None, gbps), ...] -> bw(size) step function."""
+    def bw(size):
+        for cap, g in levels:
+            if cap is None or size <= cap:
+                return g
+        return levels[-1][1]
+    return bw
+
+
+TWO_LEVEL = [(256 * 2**10, 80.0), (None, 10.0)]
+THREE_LEVEL = [(32 * 2**10, 120.0), (1 * 2**20, 60.0), (None, 12.0)]
+FOUR_LEVEL = [(32 * 2**10, 150.0), (512 * 2**10, 90.0),
+              (8 * 2**20, 40.0), (None, 9.0)]
+
+
+def sample_curve(levels, lo=8 * 2**10, hi=128 * 2**20, n=48, noise=0.0,
+                 seed=0):
+    bw = staircase(levels)
+    sizes = np.unique(np.geomspace(lo, hi, n).astype(np.int64))
+    rng = np.random.default_rng(seed)
+    g = np.array([bw(s) for s in sizes])
+    if noise:
+        g = g * (1.0 + rng.normal(0.0, noise, size=len(g)))
+    return sizes, g
+
+
+@pytest.mark.parametrize("truth", [TWO_LEVEL, THREE_LEVEL, FOUR_LEVEL],
+                         ids=["2level", "3level", "4level"])
+def test_detect_recovers_known_hierarchies(truth):
+    sizes, g = sample_curve(truth, noise=0.02, seed=3)
+    det = detect_levels(sizes, g)
+    assert det.n_levels == len(truth)
+    for lvl, (cap, gbps) in zip(det.levels, truth):
+        # bandwidth: truth within the reported CI (plus a small tolerance
+        # floor for the tiny-n plateaus)
+        lo_ci, hi_ci = lvl.gbps_ci
+        assert lo_ci - 0.1 * gbps <= gbps <= hi_ci + 0.1 * gbps, \
+            (lvl.name, lvl.gbps_ci, gbps)
+        if cap is None:
+            assert lvl.capacity_bytes is None and lvl.capacity_ci is None
+        else:
+            # capacity: measured bracket must contain (or closely bracket)
+            # the true boundary — the bracket's lower edge is the last size
+            # that still fits, so truth >= lo and truth < ~hi
+            lo_b, hi_b = lvl.capacity_ci
+            assert lo_b <= cap <= hi_b * 1.05, (lvl.name, lvl.capacity_ci, cap)
+            assert abs(math.log(lvl.capacity_bytes / cap)) < math.log(2.0)
+
+
+def test_detect_noisy_plateaus_level_count_stable():
+    for seed in range(4):
+        sizes, g = sample_curve(THREE_LEVEL, noise=0.06, seed=seed)
+        det = detect_levels(sizes, g)
+        assert det.n_levels == 3, (seed, [l.gbps for l in det.levels])
+
+
+def test_detect_degenerate_single_level():
+    sizes, g = sample_curve([(None, 42.0)], noise=0.03, seed=1)
+    det = detect_levels(sizes, g)
+    assert det.n_levels == 1
+    lvl = det.levels[0]
+    assert lvl.name == "DRAM" and lvl.capacity_bytes is None
+    assert lvl.gbps == pytest.approx(42.0, rel=0.05)
+    assert det.boundaries == [] and det.unresolved(0.1) == []
+
+
+def test_detect_rejects_bad_input():
+    with pytest.raises(ValueError):
+        detect_levels([], [])
+    with pytest.raises(ValueError):
+        detect_levels([1024, 2048], [10.0])
+    with pytest.raises(ValueError):
+        detect_levels([1024, 2048], [10.0, 0.0])
+
+
+def test_detect_small_sample_counts():
+    # detection must not crash below the filter/DP minimums
+    for n in (1, 2, 3, 4):
+        sizes, g = sample_curve(TWO_LEVEL, n=n)
+        det = detect_levels(sizes, g)
+        assert 1 <= det.n_levels <= 2
+
+
+# ---------------------------------------------------------------------------
+# synthetic runner — drives adaptive/fit/characterize hermetically
+# ---------------------------------------------------------------------------
+
+class _Pt:
+    def __init__(self, nbytes, mix, gbps):
+        self.nbytes, self.mix, self.gbps = nbytes, mix, gbps
+
+
+class _Res:
+    def __init__(self):
+        self.points, self.meta = [], {}
+
+
+class SyntheticRunner:
+    """Duck-typed bench.Runner over a synthetic staircase machine."""
+    PENALTY = {"load_sum": 1.0, "copy": 0.9, "fma_8": 0.7, "fma_32": 0.4}
+
+    def __init__(self, levels=THREE_LEVEL, noise=0.02, seed=0):
+        self.bw = staircase(levels)
+        self.noise, self.seed = noise, seed
+        self.calls = 0
+        self.sizes_run: list[int] = []
+
+    def run(self, spec):
+        self.calls += 1
+        rng = np.random.default_rng(self.seed + hash(spec.sizes) % 2**16)
+        res = _Res()
+        for nb in spec.sizes:
+            self.sizes_run.append(nb)
+            for m in spec.mixes:
+                g = self.bw(nb) * self.PENALTY.get(m, 0.5) \
+                    * (1.0 + rng.normal(0.0, self.noise))
+                res.points.append(_Pt(nb, m, g))
+        res.meta["sizes"] = list(spec.sizes)
+        return res
+
+
+def test_adaptive_converges_with_fewer_points_than_dense():
+    r = SyntheticRunner(THREE_LEVEL)
+    sw = adaptive_sweep("load_sum", runner=r, lo=16 * 2**10, hi=64 * 2**20,
+                        resolution=0.10, coarse_per_decade=3, max_rounds=8)
+    assert sw.converged
+    assert sw.rounds <= 8
+    assert sw.detection.n_levels == 3
+    # strictly fewer measured sizes than the dense grid at this resolution
+    assert sw.n_points < sw.dense_equivalent()
+    # boundaries localized to the requested resolution — or to the buffer
+    # tile floor (4 KiB per 8-row f32 step: brackets at small sizes can't
+    # get relatively tighter than ~2 tile steps)
+    for b in sw.detection.boundaries:
+        floor = 2 * 4096 / b.lo
+        assert b.resolved(max(0.10, floor)), (b.lo, b.hi, b.width)
+    # and the true capacities sit inside the final brackets
+    for b, (cap, _) in zip(sw.detection.boundaries, THREE_LEVEL):
+        assert b.lo <= cap <= b.hi * 1.05
+
+
+def test_adaptive_bisection_targets_brackets_only():
+    """Refinement rounds must spend samples near boundaries, not mid-plateau:
+    every post-coarse size lies inside a round's recorded bracket."""
+    r = SyntheticRunner(TWO_LEVEL, noise=0.0)
+    sw = adaptive_sweep("load_sum", runner=r, lo=16 * 2**10, hi=64 * 2**20,
+                        resolution=0.10, coarse_per_decade=3)
+    coarse = sw.history[0]["new_points"]
+    refinements = sw.sizes_run = r.sizes_run[coarse:]
+    all_brackets = [b for h in sw.history for b in h["brackets"]]
+    for s in refinements:
+        assert any(lo < s < hi for lo, hi in all_brackets), (s, all_brackets)
+
+
+def test_adaptive_single_level_converges_round_one():
+    r = SyntheticRunner([(None, 30.0)])
+    sw = adaptive_sweep("load_sum", runner=r, lo=16 * 2**10, hi=16 * 2**20,
+                        coarse_per_decade=3)
+    assert sw.rounds == 1 and sw.converged
+    assert sw.detection.n_levels == 1
+
+
+def test_adaptive_resolution_floor_terminates():
+    """A bracket narrower than one working-set tile can't refine further —
+    the driver must flag it floored and stop, not loop to max_rounds."""
+    r = SyntheticRunner([(12 * 2**10, 90.0), (None, 20.0)], noise=0.0)
+    sw = adaptive_sweep("load_sum", runner=r, lo=8 * 2**10, hi=256 * 2**10,
+                        resolution=0.001, coarse_per_decade=8, max_rounds=12)
+    assert sw.rounds < 12
+    assert sw.converged
+
+
+# ---------------------------------------------------------------------------
+# fit + serialization + registry + report
+# ---------------------------------------------------------------------------
+
+def _fitted(levels=THREE_LEVEL, **kw):
+    return characterize(runner=SyntheticRunner(levels), register=False,
+                        prior=HardwareSpec("prior", None, (
+                            MemLevel("L1d", 32 * 2**10, None),
+                            MemLevel("DRAM", None, None))),
+                        lo=16 * 2**10, hi=64 * 2**20, **kw)
+
+
+def test_characterize_pipeline_fits_all_mixes_every_level():
+    model, sweep = _fitted()
+    assert model.schema_version == 1
+    assert len(model.levels) == 3
+    for lvl in model.levels:
+        assert set(lvl.bandwidth) == {"load_sum", "copy", "fma_8", "fma_32"}
+        rels = model.mix_penalty[lvl.name]
+        assert max(rels.values()) == pytest.approx(1.0)
+        # penalties recovered within tolerance
+        assert rels["fma_32"] == pytest.approx(0.4, abs=0.1)
+    # detected capacities match ground truth
+    for lvl, (cap, gbps) in zip(model.levels, THREE_LEVEL):
+        if cap:
+            assert abs(math.log(lvl.capacity_bytes / cap)) < math.log(1.5)
+        assert lvl.bandwidth["load_sum"]["gbps"] == pytest.approx(gbps,
+                                                                  rel=0.15)
+    # provenance records the sweep economics
+    assert model.provenance["sweep"]["n_points"] < \
+        model.provenance["sweep"]["dense_equivalent"]
+    # sysfs prior cross-check: the 32K prior is inside a measured bracket
+    checks = {c["prior"]: c for c in model.sysfs_prior["checks"]}
+    assert checks["L1d"]["within_bracket"]
+
+
+def test_fitted_model_json_roundtrip(tmp_path):
+    model, _ = _fitted()
+    p = tmp_path / "fitted.json"
+    model.to_json(p)
+    back = FittedMachineModel.from_json(p)
+    assert back.schema_version == model.schema_version
+    assert back.levels == model.levels
+    assert back.to_dict() == model.to_dict()
+    d = json.loads(p.read_text())
+    d["schema_version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        FittedMachineModel.from_dict(d)
+
+
+def test_fitted_model_registers_and_compares():
+    model, _ = _fitted()
+    model.name = "synthetic-3level"
+    spec = model.register()
+    assert "synthetic-3level" in available_specs()
+    assert get_spec("synthetic-3level") is spec
+    assert spec.levels[0].size_bytes == model.levels[0].capacity_bytes
+    assert spec.peak_flops is None      # measured model: FLOP peak unknown
+
+    cmp = model.compare_to(A64FX)
+    assert cmp["n_detected"] == 3 and cmp["n_documented"] == 3
+    l1 = cmp["levels"][0]
+    assert l1["documented"] == "L1d"
+    assert l1["capacity_ratio"] == pytest.approx(
+        model.levels[0].capacity_bytes / (64 * 2**10))
+    assert "bw_ratio" in l1
+
+
+def test_to_machine_model_downgrade_and_report():
+    model, sweep = _fitted()
+    legacy = model.to_machine_model()
+    assert isinstance(legacy, MachineModel)
+    assert set(legacy.level_bw) == {l.name for l in model.levels}
+    for lvl, mixes in legacy.mix_penalty.items():
+        assert max(mixes.values()) == pytest.approx(1.0)
+    md = render_markdown(model, sweep, documented=ALTRA)
+    for needle in ("Detected hierarchy", "Sweep economics",
+                   "sysfs prior cross-check", "Table-1 deltas", model.name):
+        assert needle in md
+
+
+def test_probe_sizes_one_per_level_inside_band():
+    r = SyntheticRunner(THREE_LEVEL)
+    sw = adaptive_sweep("load_sum", runner=r, lo=16 * 2**10, hi=64 * 2**20)
+    probes = probe_sizes(sw.detection)
+    assert len(probes) == 3
+    measured = {p.nbytes for p in sw.result.points}
+    assert set(probes) <= measured      # re-times, never new compilations
+
+
+def test_fit_keeps_detection_bandwidth_when_band_empty():
+    """Detected capacity below 2x the grid floor: summarize's band for that
+    level is empty — the detection plateau stats must survive as the
+    level's primary-mix cell instead of an empty bandwidth dict, and
+    probe_sizes must not burn samples on sizes no band will credit."""
+    r = SyntheticRunner([(28 * 2**10, 100.0), (None, 10.0)], noise=0.0)
+    model, sweep = characterize(
+        mixes=("load_sum", "copy"), runner=r, register=False,
+        prior=HardwareSpec("p", None, (MemLevel("DRAM", None, None),)),
+        lo=16 * 2**10, hi=16 * 2**20)
+    assert len(model.levels) == 2
+    l1 = model.levels[0]
+    assert l1.capacity_bytes < 2 * 16 * 2**10     # the empty-band regime
+    assert l1.bandwidth["load_sum"]["gbps"] == pytest.approx(100.0, rel=0.1)
+    assert all(l.bandwidth for l in model.levels)
+    probes = probe_sizes(sweep.detection)
+    assert probes      # DRAM still probed; L1's band-less probe skipped
+    assert all(s > l1.capacity_bytes for s in probes)
+
+
+def test_adaptive_rejects_degenerate_rounds():
+    with pytest.raises(ValueError, match="max_rounds"):
+        adaptive_sweep("load_sum", runner=SyntheticRunner(), max_rounds=0)
+
+
+def test_crosscheck_prior_flags_disagreement():
+    sizes, g = sample_curve(TWO_LEVEL, noise=0.01)
+    det = detect_levels(sizes, g)
+    prior = HardwareSpec("prior", None, (
+        MemLevel("L1d", 256 * 2**10, None),     # matches the true boundary
+        MemLevel("L2", 16 * 2**20, None),       # fictitious level
+        MemLevel("DRAM", None, None)))
+    chk = crosscheck_prior(det, prior)
+    by = {c["prior"]: c for c in chk["checks"]}
+    assert by["L1d"]["within_bracket"]
+    assert not by["L2"]["within_bracket"]
+    assert by["L2"]["nearest_detected"] is not None
+
+
+# ---------------------------------------------------------------------------
+# satellites: machine_model schema + registry + detect_host hardening
+# ---------------------------------------------------------------------------
+
+def test_machine_model_v2_roundtrip_tuples(tmp_path):
+    m = MachineModel(hardware={"name": "x",
+                               "levels": [("L1", 32768, None),
+                                          ("DRAM", None, None)]},
+                     level_bw={"L1": {"load_sum": 9.0}},
+                     ridge_flops_per_byte=2.0,
+                     mix_penalty={"L1": {"load_sum": 1.0}})
+    assert m.model_schema_version == MODEL_SCHEMA_VERSION
+    p = tmp_path / "m.json"
+    m.to_json(p)
+    back = MachineModel.from_json(p)
+    # THE round-trip fix: levels come back as tuples, object compares equal
+    assert back.hardware["levels"] == (("L1", 32768, None),
+                                       ("DRAM", None, None))
+    assert back == m
+
+
+def test_machine_model_v1_golden_back_compat():
+    back = MachineModel.from_json(DATA / "machine_model_v1.json")
+    assert back.model_schema_version == 1
+    assert back.hardware["levels"][0] == ("L1", 32768, None)
+    assert back.level_bw["L1"]["load_sum"] == pytest.approx(98.5)
+    assert back.ridge_flops_per_byte == 4.0
+    with pytest.raises(ValueError, match="newer"):
+        MachineModel.from_dict({"hardware": {},
+                                "model_schema_version":
+                                    MODEL_SCHEMA_VERSION + 1})
+
+
+def test_peak_flops_none_means_undocumented():
+    assert ALTRA.peak_flops is None
+    assert THUNDERX2.peak_flops is None
+    assert A64FX.peak_flops == pytest.approx(3.072e12)
+    assert detect_host().peak_flops is None
+
+
+def test_spec_registry():
+    for name in ("tpu-v5e", "fujitsu-a64fx", "ampere-altra-q80-30",
+                 "marvell-thunderx2"):
+        assert name in available_specs()
+    assert get_spec("tpu-v5e").peak_flops == 197e12
+    assert get_spec("host").levels[-1].name == "DRAM"
+    with pytest.raises(KeyError, match="unknown machine spec"):
+        get_spec("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_spec(A64FX)
+
+
+def test_parse_cache_size_suffix_zoo():
+    assert parse_cache_size("64K") == 64 * 2**10
+    assert parse_cache_size("64k") == 64 * 2**10
+    assert parse_cache_size("64KiB") == 64 * 2**10
+    assert parse_cache_size("64 kB") == 64 * 2**10
+    assert parse_cache_size("8M") == 8 * 2**20
+    assert parse_cache_size("1MiB") == 2**20
+    assert parse_cache_size("65536") == 65536
+    with pytest.raises(ValueError):
+        parse_cache_size("64X")
+    with pytest.raises(ValueError):
+        parse_cache_size("lots")
+
+
+def _write_cache_index(base, idx, level, typ, size):
+    d = base / f"index{idx}"
+    d.mkdir(parents=True)
+    (d / "level").write_text(level)
+    (d / "type").write_text(typ)
+    (d / "size").write_text(size)
+
+
+def test_detect_host_hardened_sysfs(tmp_path):
+    base = tmp_path / "cache"
+    _write_cache_index(base, 0, "1", "Data", "32KiB")       # KiB suffix
+    _write_cache_index(base, 1, "1", "Instruction", "32K")  # skipped
+    _write_cache_index(base, 2, "2", "Unified", "1024k")    # lowercase
+    _write_cache_index(base, 3, "2", "Unified", "1024K")    # duplicate entry
+    _write_cache_index(base, 4, "3", "Unified", "garbage")  # unparseable
+    host = detect_host(base)
+    names = [(l.name, l.size_bytes) for l in host.levels]
+    assert names == [("L1", 32 * 2**10), ("L2", 2**20), ("DRAM", None)]
+
+
+def test_detect_host_without_sysfs(tmp_path):
+    host = detect_host(tmp_path / "nonexistent")
+    assert [l.name for l in host.levels] == ["DRAM"]
+    assert "sysfs unavailable" in host.notes
+
+
+# ---------------------------------------------------------------------------
+# consumers: autotune + roofline accept fitted models
+# ---------------------------------------------------------------------------
+
+def test_autotune_accepts_fitted_model(tmp_path):
+    from repro.core.autotune import choose_block_rows, model_block_rows
+    model, _ = _fitted()
+    # L1 ~= 32K -> blocks of rows*128*4 bytes <= 16K -> 32 rows
+    assert model_block_rows(model) == 32
+    assert choose_block_rows(2**20, model=model) == 32
+    # documented HardwareSpec works the same way
+    assert model_block_rows(A64FX) == 64            # 64K L1d -> 32K/512B
+    # path flavor
+    p = tmp_path / "fitted.json"
+    model.to_json(p)
+    assert choose_block_rows(2**20, model=str(p)) == 32
+    # cache file still wins; default path unchanged
+    assert choose_block_rows(2**20) == 128
+
+
+def test_roofline_accepts_fitted_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.roofline.analyze import analyze, machine_constants
+
+    model, _ = _fitted()
+    mc = machine_constants(model)
+    assert mc["hbm_bw"] == pytest.approx(model.hbm_bw)
+    assert "peak_flops" not in mc       # None = undocumented -> keep default
+
+    mc_doc = machine_constants(A64FX)
+    assert mc_doc["peak_flops"] == pytest.approx(3.072e12)
+    assert mc_doc["hbm_bw"] == pytest.approx(921.6e9 / 48)
+    # registry-name flavor
+    assert machine_constants("tpu-v5e")["peak_flops"] == 197e12
+    assert machine_constants(None) == {}
+
+    compiled = jax.jit(lambda a, b: a @ b).lower(
+        jnp.ones((128, 128)), jnp.ones((128, 128))).compile()
+    out = analyze(compiled, machine=model)
+    assert out["machine_model"] == model.name
+    assert out["machine_constants"]["hbm_bw"] == pytest.approx(model.hbm_bw)
+    assert out["t_memory_s"] == pytest.approx(
+        out["hbm_bytes"] / model.hbm_bw)
+
+
+def test_build_machine_model_legacy_wrapper_parity():
+    """core.analysis.build_machine_model (now a characterize wrapper) keeps
+    its legacy contract: documented hardware levels verbatim, level_bw from
+    band attribution, penalties normalized to best."""
+    from repro.bench.result import BenchPoint, BenchResult
+    from repro.core import analysis
+
+    hw = HardwareSpec("doc", None, (MemLevel("L1", 64 * 2**10, 1e9),
+                                    MemLevel("DRAM", None, None)))
+    res = BenchResult()
+    for nb, g in ((16 * 2**10, 50.0), (2 * 2**20, 8.0)):
+        for m, pen in (("load_sum", 1.0), ("copy", 0.8)):
+            res.points.append(BenchPoint(
+                nbytes=nb, mix=m, dtype="float32", backend="xla", passes=1,
+                streams=1, block_rows=None, reps=2, bytes_per_call=nb,
+                flops_per_call=0, mean_s=1e-3, std_s=0, min_s=1e-3,
+                gbps=g * pen, gflops=0))
+    model = analysis.build_machine_model(res, hw)
+    assert model.hardware == {"name": "doc",
+                              "levels": (("L1", 64 * 2**10, 1e9),
+                                         ("DRAM", None, None))}
+    assert model.level_bw["L1"]["load_sum"] == pytest.approx(50.0)
+    assert model.mix_penalty["L1"]["copy"] == pytest.approx(0.8)
+    assert model.mix_penalty["DRAM"]["load_sum"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on the real xla backend (smoke: tiny grid, 1 round)
+# ---------------------------------------------------------------------------
+
+def test_e2e_xla_smoke(tmp_path):
+    model, sweep = characterize(
+        mixes=("copy", "load_sum"), primary="copy", register=False,
+        lo=32 * 2**10, hi=4 * 2**20, coarse_per_decade=2, resolution=0.5,
+        max_rounds=1, reps=2, warmup=1, target_bytes=1e7)
+    assert sweep.rounds == 1
+    assert model.levels, "no levels fitted"
+    for lvl in model.levels:
+        for cell in lvl.bandwidth.values():
+            assert cell["gbps"] > 0
+    p = tmp_path / "fitted.json"
+    model.to_json(p)
+    back = FittedMachineModel.from_json(p)
+    assert back.levels == model.levels
+
+
+def test_cli_characterize_smoke(tmp_path, capsys):
+    from repro.bench.cli import main as cli_main
+    out = tmp_path / "fitted.json"
+    report = tmp_path / "report.md"
+    rc = cli_main(["characterize", "--smoke", "--max-rounds", "1",
+                   "--resolution", "0.5", "--out", str(out),
+                   "--report", str(report), "--compare", "fujitsu-a64fx"])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert d["schema_version"] == 1
+    assert d["levels"], "no detected levels in CLI output"
+    assert "provenance" in d and d["provenance"]["backend"] == "xla"
+    text = capsys.readouterr().out
+    assert "Detected hierarchy" in text
+    assert "Table-1 deltas" in text
+    assert report.exists()
+
+
+def test_grid_helpers_shared():
+    from repro.core import buffers
+    g = buffers.hierarchy_grid()
+    assert g[0] >= 8 * 2**10 and g[-1] >= 64 * 2**20
+    assert list(g) == sorted(set(g))
+    # snapped: every size is a real working-set size (idempotent)
+    assert list(g) == buffers.snap_sizes(g)
+    assert buffers.hierarchy_grid(quick=True) == buffers.QUICK_SIZES
+    # sub-tile requests collapse to one measurement
+    assert len(buffers.snap_sizes([4096, 4097, 4100])) == 1

@@ -22,7 +22,7 @@ from repro.core.buffers import hierarchy_grid
 STREAM_COUNTS = (1, 2, 4, 8)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, out: str | None = None):
     # shared grid constructor (core.buffers): the quick ladder, or a sparse
     # log grid across the full hierarchy span — per-script size lists are gone
     sizes = hierarchy_grid(quick=True) if quick else \
@@ -39,9 +39,15 @@ def main(quick: bool = False):
     for p in sorted(res.points, key=lambda p: (p.nbytes, p.streams)):
         emit(f"fig1/streams{p.streams}/{p.nbytes}B", p.mean_s * 1e6,
              f"{p.gbps:.2f}GB/s;rel={rel[p]:.3f}")
+    if out:
+        res.to_json(out)
+        print(f"# saved {len(res.points)} points "
+              f"(schema v{res.schema_version}) -> {out}")
+    return res
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, help="write result JSON here")
     main(**vars(ap.parse_args()))

@@ -37,8 +37,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: bench,fig1,fig2,fig3,fig4,fig5,table1,"
-                         "collectives,roofline")
+                    help="comma list: bench,fig1,fig2,fig3,fig4,fig5,fig6,"
+                         "table1,collectives,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -74,6 +74,11 @@ def main() -> None:
         print("\n## fig5: R:W-ratio sweep, store-path attribution (rw family)")
         from benchmarks import fig5_rw_ratio
         fig5_rw_ratio.main(quick=quick)
+    if want("fig6"):
+        print("\n## fig6: instruction-stream classification "
+              "(bandwidth- vs issue-bound)")
+        from benchmarks import fig6_istream
+        fig6_istream.main(quick=quick)
     if want("collectives"):
         print("\n## collectives: ICI-analogue link throughput (subprocess)")
         _subproc("benchmarks.collective_bench_main", quick)

@@ -29,8 +29,39 @@ from typing import Callable, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 
-from repro.bench.mixes import MixDef, get_mix
-from repro.bench.spec import BenchSpec, BenchSpecError
+from repro.bench.mixes import MixDef, get_mix, interleavable
+from repro.bench.spec import BenchSpec, BenchSpecError, knob_names
+
+
+#: BenchSpec fields that can NEVER change what make_case compiles — either
+#: they are explicit slots of the cache key already (mixes/sizes/dtype/
+#: backend/passes resolve to the per-case key columns) or they only shape
+#: the measurement around the compiled case (repetition discipline, buffer
+#: fill value, labels).  Everything else — including any FUTURE knob — is
+#: part of the key by default: forgetting to classify a new field makes the
+#: cache miss, never alias.
+_NON_CASE_FIELDS = frozenset({
+    "mixes", "sizes", "dtype", "backend", "passes",     # explicit key slots
+    "reps", "warmup", "value", "target_bytes", "tags",  # measurement-only
+})
+
+
+def case_knobs(spec: BenchSpec) -> tuple:
+    """(name, value) pairs of every spec field that can affect compilation,
+    derived from the dataclass fields (not an explicit list) so new knobs
+    are cache-safe by construction.  Shared by ``case_key`` and the istream
+    profile cache."""
+    import dataclasses
+    return tuple((f.name, getattr(spec, f.name))
+                 for f in dataclasses.fields(spec)
+                 if f.name not in _NON_CASE_FIELDS)
+
+
+def _gate(backend_name: str, rule: str) -> str:
+    """Suffix naming the backend gate that rejected a knob combination, plus
+    the valid knob names — so the error decodes without opening spec.py."""
+    return (f" [gate: {rule}, raised by {backend_name}.validate; valid spec "
+            f"knobs: {', '.join(knob_names())}]")
 
 
 @runtime_checkable
@@ -59,9 +90,12 @@ class _CaseBackend:
 
     def case_key(self, spec: BenchSpec, mix: MixDef, shape, dtype,
                  passes: int) -> tuple:
-        """Everything ``make_case`` depends on — the Runner's cache key."""
+        """Everything ``make_case`` depends on — the Runner's cache key.
+        The knob columns derive from the FULL spec field set minus the
+        measurement-only fields (``case_knobs``), so a future knob that
+        changes compilation can never alias a stale cached case."""
         return (self.name, mix.name, tuple(shape), str(dtype), passes,
-                spec.streams, spec.block_rows, spec.devices, spec.interpret)
+                case_knobs(spec))
 
     def make_case(self, spec: BenchSpec, mix: MixDef, shape, dtype,
                   passes: int) -> Callable:
@@ -72,6 +106,15 @@ class _CaseBackend:
         size's cases (e.g. the sharded backend spreads x over its mesh here
         so per-mix bindings share one placed copy)."""
         return x
+
+    def abstract_args(self, spec: BenchSpec, mix: MixDef, shape, dtype
+                      ) -> tuple:
+        """ShapeDtypeStructs matching ``make_case``'s positional buffers —
+        what ``jax.jit(case).lower(...)`` needs (the istream extractor
+        lowers cached cases without materializing working sets)."""
+        import jax
+        sds = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        return (sds,) * _mix_arity(mix)
 
     def bind_case(self, case: Callable, spec: BenchSpec, mix: MixDef, x
                   ) -> Callable[[], object]:
@@ -88,18 +131,37 @@ def _validate_oracle_knobs(spec: BenchSpec, backend_name: str) -> None:
     for m in spec.mixes:
         mix = get_mix(m)
         if "xla" not in mix.backends:
-            raise BenchSpecError(f"mix {m!r} not supported on {backend_name}")
+            raise BenchSpecError(f"mix {m!r} not supported on {backend_name}"
+                                 + _gate(backend_name, "mix support"))
         if spec.streams > 1 and m != "load_sum":
             raise BenchSpecError(
                 f"{backend_name} backend expresses streams>1 only for "
-                f"load_sum (the strided-walk oracle); got mix {m!r}")
+                f"load_sum (the strided-walk oracle); got mix {m!r}"
+                + _gate(backend_name, "streams>1 needs the strided oracle"))
         if spec.block_rows is not None and m != "load_sum":
             raise BenchSpecError(
                 f"{backend_name} backend expresses block_rows only for "
-                f"load_sum (the blocked-walk oracle); got mix {m!r}")
+                f"load_sum (the blocked-walk oracle); got mix {m!r}"
+                + _gate(backend_name, "block_rows needs the blocked oracle"))
+        if spec.interleave > 1 and not interleavable(mix):
+            raise BenchSpecError(
+                f"mix {m!r} has no interleaved variant on {backend_name} "
+                f"(interleave>1 needs independent per-chunk chains — "
+                f"load_sum, copy, or the rw_RtoW family)"
+                + _gate(backend_name, "interleave>1 needs an interleavable "
+                                      "mix"))
     if spec.streams > 1 and spec.block_rows is not None:
         raise BenchSpecError(f"{backend_name} backend: streams and "
-                             "block_rows are mutually exclusive knobs")
+                             "block_rows are mutually exclusive knobs"
+                             + _gate(backend_name,
+                                     "streams xor block_rows"))
+    if spec.interleave > 1 and (spec.streams > 1
+                                or spec.block_rows is not None):
+        raise BenchSpecError(
+            f"{backend_name} backend: interleave>1 does not compose with "
+            f"streams>1 or block_rows (the interleaved oracles walk the "
+            f"whole buffer in row chunks)"
+            + _gate(backend_name, "interleave xor streams/block_rows"))
 
 
 def _mix_arity(mix: MixDef) -> int:
@@ -137,9 +199,22 @@ def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
     triad takes (a, b, c), rw_RtoW takes its R+W stream buffers, everything
     else takes x)."""
     from repro.core import instruction_mix as im
+    unroll, interleave = spec.unroll, spec.interleave
+    if passes % unroll:
+        # the Runner rounds auto-picked passes up; a direct build() with
+        # explicit passes surfaces here instead of a trace-time ValueError
+        raise BenchSpecError(
+            f"passes={passes} is not a multiple of unroll={unroll}"
+            + _gate(backend_name, "passes % unroll == 0"))
+    if interleave > 1 and rows % interleave:
+        raise BenchSpecError(
+            f"interleave {interleave} does not divide {rows} rows"
+            + ("" if backend_name == "xla" else
+               f" (the per-device shard on {backend_name})")
+            + _gate(backend_name, "interleave | rows"))
     if mix.name == "load_sum" and spec.streams > 1:
         streams = spec.streams
-        return lambda x: im.k_strided_sum(x, streams, passes)
+        return lambda x: im.k_strided_sum(x, streams, passes, unroll)
     if mix.name == "load_sum" and spec.block_rows is not None:
         brows = spec.block_rows
         if rows % brows:
@@ -147,14 +222,19 @@ def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
                 f"block_rows {brows} does not divide {rows} rows"
                 + ("" if backend_name == "xla" else
                    f" (the per-device shard on {backend_name})"))
-        return lambda x: im.k_blocked_sum(x, brows, passes)
+        return lambda x: im.k_blocked_sum(x, brows, passes, unroll)
     if mix.name == "triad":
-        return lambda a, b, c: im.k_triad(a, b, c, passes)
+        return lambda a, b, c: im.k_triad(a, b, c, passes, unroll)
     if mix.rw is not None:
         reads = mix.rw[0]
-        return lambda *bufs: im.k_rw(bufs[:reads], bufs[reads:], passes)
+        if interleave > 1:
+            return lambda *bufs: im.k_rw_istream(
+                bufs[:reads], bufs[reads:], passes, unroll, interleave)
+        return lambda *bufs: im.k_rw(bufs[:reads], bufs[reads:], passes,
+                                     unroll)
     name = mix.name
-    return lambda x: im.run_mix(name, x, passes)
+    return lambda x: im.run_mix(name, x, passes, unroll=unroll,
+                                interleave=interleave)
 
 
 def _bind_oracle_case(case: Callable, mix: MixDef, x) -> Callable[[], object]:
@@ -387,8 +467,17 @@ class PallasBackend(_CaseBackend):
 
     def validate(self, spec: BenchSpec) -> None:
         for m in spec.mixes:
-            if not self.supports(get_mix(m)):
-                raise BenchSpecError(f"mix {m!r} not supported on pallas")
+            mix = get_mix(m)
+            if not self.supports(mix):
+                raise BenchSpecError(f"mix {m!r} not supported on pallas"
+                                     + _gate(self.name, "mix support"))
+            if spec.interleave > 1 and not interleavable(mix):
+                raise BenchSpecError(
+                    f"mix {m!r} has no interleaved variant on pallas "
+                    f"(interleave>1 needs independent per-chunk chains — "
+                    f"load_sum, copy, or the rw_RtoW family)"
+                    + _gate(self.name, "interleave>1 needs an "
+                                       "interleavable mix"))
 
     def make_case(self, spec, mix, shape, dtype, passes):
         from repro.kernels.membench import ops as mb_ops
@@ -400,9 +489,28 @@ class PallasBackend(_CaseBackend):
         if n_blocks % spec.streams:
             raise BenchSpecError(
                 f"streams {spec.streams} does not divide {n_blocks} blocks")
+        if passes % spec.unroll:
+            raise BenchSpecError(
+                f"passes={passes} is not a multiple of unroll={spec.unroll}"
+                + _gate(self.name, "passes % unroll == 0"))
+        if spec.interleave > 1 and rows % spec.interleave:
+            raise BenchSpecError(
+                f"interleave {spec.interleave} does not divide the "
+                f"{rows}-row VMEM tile"
+                + _gate(self.name, "interleave | block_rows"))
         return mb_ops.make_timed_kernel(
             mix.name, depth=mix.fma_depth or 8, block_rows=rows,
-            streams=spec.streams, interpret=spec.interpret, passes=passes)
+            streams=spec.streams, interpret=spec.interpret, passes=passes,
+            unroll=spec.unroll, interleave=spec.interleave)
+
+    def abstract_args(self, spec, mix, shape, dtype):
+        import jax
+        sds = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        if mix.name == "triad":
+            return (sds, sds)           # fn(x, y)
+        if mix.rw is not None:
+            return (sds,) * mix.rw[0]   # fn(x, *extra_read_streams)
+        return (sds,)
 
     def bind_case(self, case, spec, mix, x):
         if mix.name == "triad":

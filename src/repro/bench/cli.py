@@ -9,6 +9,9 @@ launch.
     compare     the same spec on several backends, side by side
     characterize  adaptive fine-granularity sweep -> detected topology ->
                 FittedMachineModel JSON + markdown report (repro.characterize)
+    istream     instruction-stream microscope: unroll x interleave sweep ->
+                compiled-HLO instruction profiles -> bandwidth-vs-issue-bound
+                classification + fig6 table (repro.istream)
     launch      spawn N coordinated local processes running ``run --backend
                 distributed`` with forced host devices — the single-machine
                 simulation of a multi-host Fig-4 scaling study
@@ -54,6 +57,10 @@ def _spec_from_args(args) -> BenchSpec:
         kw["block_rows"] = args.block_rows
     if args.dtype is not None:
         kw["dtype"] = args.dtype
+    if args.unroll is not None:
+        kw["unroll"] = args.unroll
+    if args.interleave is not None:
+        kw["interleave"] = args.interleave
     if args.quick:
         return quick_spec(backend=args.backend, **kw)
     return BenchSpec(backend=args.backend, **kw)
@@ -75,6 +82,10 @@ def _add_spec_flags(p: argparse.ArgumentParser):
                    help="mesh devices (multi-device backends, e.g. sharded)")
     p.add_argument("--block-rows", dest="block_rows", type=int, default=None)
     p.add_argument("--dtype", default=None)
+    p.add_argument("--unroll", type=int, default=None,
+                   help="per-pass unroll factor (istream knob)")
+    p.add_argument("--interleave", type=int, default=None,
+                   help="independent dependence chains (istream knob)")
 
 
 def cmd_run(args) -> int:
@@ -205,6 +216,57 @@ def cmd_characterize(args) -> int:
     return 0
 
 
+def cmd_istream(args) -> int:
+    """Instruction-stream sweep + classification (see repro.istream): runs
+    the unroll x interleave grid on the requested backends/mixes, extracts
+    per-case compiled-IR profiles, labels every point bandwidth-bound vs
+    issue-bound, and prints the fig6 table.  ``--smoke`` is the CI gate: it
+    first runs the deterministic synthetic classifier self-test (must see
+    BOTH labels), then a seconds-scale end-to-end sweep."""
+    from repro.istream import run_istream, synthetic_check
+
+    if args.smoke:
+        chk = synthetic_check()
+        print(f"# synthetic check: {chk['labels']} "
+              f"(issue rate {chk['issue_rate']:.3e} elem-ops/s)")
+        if not chk["ok"]:
+            print("error: synthetic classifier check failed "
+                  f"({chk})", file=sys.stderr)
+            return 2
+    model = None
+    if args.model:
+        from repro.characterize.fit import FittedMachineModel
+        model = FittedMachineModel.from_json(args.model)
+    kw: dict = dict(smoke=args.smoke, model=model)
+    if args.backends:
+        kw["backends"] = tuple(args.backends.split(","))
+    if args.mixes:
+        kw["mixes"] = tuple(args.mixes.split(","))
+    if args.sizes:
+        kw["sizes"] = _parse_sizes(args.sizes)
+    if args.unrolls:
+        kw["unrolls"] = tuple(int(u) for u in args.unrolls.split(","))
+    if args.interleaves:
+        kw["interleaves"] = tuple(int(i) for i in args.interleaves.split(","))
+    if args.reps is not None:
+        kw["reps"] = args.reps
+    report = run_istream(**kw)
+    print(report.table)
+    labels = report.labels
+    if args.out:
+        report.result.to_json(args.out)
+        print(f"# saved {len(report.result.points)} classified points "
+              f"(schema v{report.result.schema_version}) -> {args.out}")
+    if args.smoke and (not labels.get("issue-bound")
+                       or not labels.get("bandwidth-bound")):
+        # the measured sweep may legitimately land one-sided on unusual
+        # hosts; the smoke gate only demands the synthetic check (above)
+        # prove both labels reachable, so just flag it
+        print(f"# note: measured sweep was one-sided ({labels}); "
+              f"synthetic check covered both labels")
+    return 0
+
+
 def cmd_launch(args) -> int:
     """Spawn N coordinated local processes running ``run`` with the same
     spec flags (see bench.distributed.launch_local).  All children share one
@@ -287,6 +349,32 @@ def main(argv=None) -> int:
     p_chz.add_argument("--report", default=None,
                        help="write a markdown (.md) or JSON (.json) report")
     p_chz.set_defaults(fn=cmd_characterize)
+
+    p_ist = sub.add_parser(
+        "istream",
+        help="unroll x interleave sweep -> compiled-IR profiles -> "
+             "bandwidth-vs-issue-bound classification (fig6)",
+        allow_abbrev=False)
+    p_ist.add_argument("--smoke", action="store_true",
+                       help="CI gate: synthetic classifier self-test + "
+                            "seconds-scale end-to-end sweep")
+    p_ist.add_argument("--backends", default=None,
+                       help="comma list (default: xla,pallas)")
+    p_ist.add_argument("--mixes", "--mix", default=None,
+                       help="comma list (default: copy,rw_2to1)")
+    p_ist.add_argument("--sizes", default=None,
+                       help="comma list, K/M/G ok: 64K,1M")
+    p_ist.add_argument("--unrolls", default=None,
+                       help="comma list of unroll factors (default: 1,2)")
+    p_ist.add_argument("--interleaves", default=None,
+                       help="comma list of chain counts (default: 1,2)")
+    p_ist.add_argument("--reps", type=int, default=None)
+    p_ist.add_argument("--model", default=None,
+                       help="FittedMachineModel JSON for bandwidth lookup "
+                            "(else self-calibrated from the sweep)")
+    p_ist.add_argument("--out", default=None,
+                       help="write the classified result JSON here")
+    p_ist.set_defaults(fn=cmd_istream)
 
     p_launch = sub.add_parser(
         "launch", help="N coordinated local processes (multi-host simulation)",

@@ -13,7 +13,11 @@ schema_version history: 1 = original point schema; 2 = points carry
 machine meta records process identity (``process_count`` /
 ``process_index`` / ``local_device_count`` — the ``distributed`` backend),
 and unbounded ``summarize`` bands serialize as ``null`` instead of the
-non-JSON ``Infinity``.  Older files load unchanged with the defaults.
+non-JSON ``Infinity``; 4 = points carry the instruction-stream knobs
+(``unroll`` / ``interleave``) and an optional ``istream`` dict — the
+per-point compiled-IR instruction profile + bandwidth-vs-issue-bound label
+attached by ``repro.istream``.  Older files load unchanged with the
+defaults.
 """
 from __future__ import annotations
 
@@ -23,7 +27,7 @@ import platform
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 
 def level_band(level_size: int | None,
@@ -58,6 +62,10 @@ class BenchPoint:
     devices: int = 1            # schema v2; v1 files load with the default
     nbytes_requested: int | None = None     # schema v3: the spec size before
     #   buffers.working_set_shape rounding (None on pre-v3 files)
+    unroll: int = 1             # schema v4: instruction-stream knobs
+    interleave: int = 1
+    istream: dict | None = None     # schema v4: repro.istream attaches the
+    #   compiled-IR profile + bound classification here (None = not analyzed)
 
 
 @dataclass
@@ -105,7 +113,8 @@ class BenchResult:
             out.append((p, rel))
         return out
 
-    def summarize(self, levels=None, min_band_bytes: int = 4 * 2**10) -> dict:
+    def summarize(self, levels=None, min_band_bytes: int = 4 * 2**10,
+                  key=None) -> dict:
         """Per-level bandwidth attribution folded into the result — the
         paper's §6 'cumulative mean per hierarchy level', as a view on the
         points, so figure scripts stop re-deriving L1/L2/DRAM tables.
@@ -126,9 +135,15 @@ class BenchResult:
         unbounded band's upper edge is ``None`` (NOT ``float("inf")``): a
         summary stashed into ``meta`` must survive ``to_json``, and JSON has
         no ``Infinity`` — consumers treat a ``None`` edge as open.
+
+        ``key`` overrides the per-point grouping column (default: the mix
+        name) — e.g. ``lambda p: f"{p.mix}/u{p.unroll}x{p.interleave}"``
+        groups a knob sweep by the instruction-stream axes.  Prefer string
+        keys if the summary is stashed into ``meta`` (JSON object keys).
         """
         if levels is None:
             levels = (("all", None),)
+        key = key or (lambda p: p.mix)
         out: dict[str, dict] = {}
         prev = min_band_bytes / 2.0
         for lvl in levels:
@@ -138,7 +153,7 @@ class BenchResult:
             mixes: dict[str, dict] = {}
             for p in self.points:
                 if lo <= p.nbytes <= hi:
-                    cell = mixes.setdefault(p.mix, {"gbps": 0.0, "n": 0})
+                    cell = mixes.setdefault(key(p), {"gbps": 0.0, "n": 0})
                     cell["gbps"] += p.gbps
                     cell["n"] += 1
             if mixes:

@@ -72,6 +72,10 @@ class Runner:
             n_elems = shape[0] * shape[1]
             real_bytes = n_elems * dtype.itemsize
             passes = spec.passes or pick_passes(real_bytes, spec.target_bytes)
+            if passes % spec.unroll:
+                # auto-picked passes round UP to whole unrolled loop bodies
+                # (explicit spec.passes is validated to divide already)
+                passes += spec.unroll - passes % spec.unroll
             group = []
             for name in spec.mixes:
                 mix = get_mix(name)
@@ -108,7 +112,8 @@ class Runner:
                     block_rows=spec.block_rows, reps=spec.reps,
                     bytes_per_call=bpc, flops_per_call=fpc,
                     mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
-                    gbps=t.gbps, gflops=t.gflops, devices=spec.devices))
+                    gbps=t.gbps, gflops=t.gflops, devices=spec.devices,
+                    unroll=spec.unroll, interleave=spec.interleave))
             del x           # release this size before building the next
         return res
 

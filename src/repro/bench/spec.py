@@ -14,10 +14,22 @@ the Runner executes on any registered backend.  Knob -> paper mapping:
     block_rows   C4  rows per load step (LD1D/LD2D/LD4D analogue)
     devices      Fig 4  working set spread over the first k mesh devices
                  (multi-device backends only, e.g. ``sharded``)
+    unroll       §5  per-pass unroll factor: the measurement loop body holds
+                 ``unroll`` chained sweeps per trip (fewer loop-control ops
+                 per byte moved — the decode/issue-width probe)
+    interleave   §5  independent dependence chains per sweep: the working set
+                 is split into ``interleave`` row chunks, each with its own
+                 accumulator, combined only after the sweep (shortens the
+                 dependence critical path without changing bytes/flops)
     reps/warmup/passes   the serialized-timing repetition discipline (§4/§5)
 
+``unroll`` and ``interleave`` feed ``repro.istream``: they vary issue
+pressure and ILP at *constant* accounting, so the instruction-stream
+classifier can separate bandwidth-bound from issue-bound points.
+
 spec_version history: 1 = original knob set; 2 = adds ``devices`` (older
-files load with the single-device default).
+files load with the single-device default); 3 = adds ``unroll`` /
+``interleave`` (the instruction-stream knobs; older files load with 1/1).
 """
 from __future__ import annotations
 
@@ -28,11 +40,17 @@ from pathlib import Path
 
 from repro.bench import mixes as mixreg
 
-SPEC_VERSION = 2
+SPEC_VERSION = 3
 
 
 class BenchSpecError(ValueError):
     """Invalid BenchSpec field or unsupported knob/backend combination."""
+
+
+def knob_names() -> tuple[str, ...]:
+    """Every valid BenchSpec field name, sorted — error messages list these
+    so an unknown/invalid knob is decodable without opening this file."""
+    return tuple(sorted(f.name for f in dataclasses.fields(BenchSpec)))
 
 
 @dataclass(frozen=True)
@@ -45,6 +63,8 @@ class BenchSpec:
     block_rows: int | None = None     # None = backend default tiling
     streams: int = 1
     devices: int = 1                  # mesh devices (multi-device backends)
+    unroll: int = 1                   # sweeps per measurement-loop trip
+    interleave: int = 1               # independent dependence chains / sweep
     passes: int | None = None         # None = auto from target_bytes
     target_bytes: float = 2e8         # auto pass-picking: bytes per timed call
     reps: int = 10
@@ -96,8 +116,18 @@ class BenchSpec:
             raise BenchSpecError(
                 f"block_rows must be a positive multiple of 8 (the f32 "
                 f"sublane tile): {self.block_rows}")
+        if self.unroll < 1:
+            raise BenchSpecError(f"unroll must be >= 1: {self.unroll}")
+        if self.interleave < 1:
+            raise BenchSpecError(
+                f"interleave must be >= 1: {self.interleave}")
         if self.passes is not None and self.passes < 1:
             raise BenchSpecError(f"passes must be >= 1: {self.passes}")
+        if self.passes is not None and self.passes % self.unroll:
+            raise BenchSpecError(
+                f"passes={self.passes} must be a multiple of "
+                f"unroll={self.unroll} (the measurement loop runs whole "
+                f"unrolled bodies); drop passes to let the Runner round up")
         if self.reps < 1 or self.warmup < 0:
             raise BenchSpecError(
                 f"need reps >= 1, warmup >= 0: {self.reps}, {self.warmup}")
@@ -137,7 +167,9 @@ class BenchSpec:
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
         if unknown:
-            raise BenchSpecError(f"unknown spec fields: {sorted(unknown)}")
+            raise BenchSpecError(
+                f"unknown spec fields: {sorted(unknown)}; valid fields: "
+                f"{list(knob_names())}")
         return cls(**d)
 
     @classmethod

@@ -30,7 +30,11 @@ from repro.characterize.detect import Detection, detect_from_result
 from repro.core.machine_model import (HardwareSpec, MachineModel, MemLevel,
                                       detect_host, register_spec)
 
-FITTED_SCHEMA_VERSION = 1
+# schema history: 1 = levels/penalties/ridge/prior/provenance; 2 = optional
+# ``issue`` dict — the fitted instruction-issue model (``rate_elems_per_s``
+# + fit provenance) that ``repro.istream`` classifies against.  v1 files
+# load unchanged (issue stays None).
+FITTED_SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -63,6 +67,9 @@ class FittedMachineModel:
     mix_penalty: dict = field(default_factory=dict)   # level -> {mix: rel}
     sysfs_prior: Optional[dict] = None    # {"levels": [...], "crosscheck": [..]}
     provenance: dict = field(default_factory=dict)    # sweep economics + meta
+    issue: Optional[dict] = None    # schema v2: fitted issue model —
+    #   {"rate_elems_per_s": float, ...fit provenance}; repro.istream both
+    #   fits it (fit_issue_rate) and classifies against it
     schema_version: int = FITTED_SCHEMA_VERSION
 
     def __post_init__(self):
@@ -174,6 +181,7 @@ class FittedMachineModel:
             "mix_penalty": self.mix_penalty,
             "sysfs_prior": self.sysfs_prior,
             "provenance": self.provenance,
+            "issue": self.issue,
         }
 
     def to_json(self, path: str | Path | None = None) -> str:

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 # is (8, 128) for f32; LD1/2/4 analogue = 8/16/32/... rows per block.
 CANDIDATE_ROWS = (8, 16, 32, 64, 128, 256, 512)
 
+# candidate unroll factors — the instruction-stream axis (paper §5: unrolled
+# bodies probe decode/issue width the way LD1/2/4 probe the load path)
+CANDIDATE_UNROLLS = (1, 2, 4, 8)
+
 
 @dataclass
 class TuneResult:
@@ -27,12 +31,23 @@ class TuneResult:
     mix: str
     best_rows: int
     table: dict  # rows -> GB/s
+    best_unroll: int = 1
+    unroll_table: dict | None = None    # unroll -> GB/s (at best_rows)
 
 
 def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
-                       reps: int = 8, interpret: bool = True) -> TuneResult:
+                       reps: int = 8, interpret: bool = True,
+                       tune_unroll: bool = False) -> TuneResult:
     """Run the *Pallas* membench kernels across block shapes via the bench
     Runner (one BenchSpec per candidate row count; C4 of the paper).
+
+    ``tune_unroll=True`` adds the second objective: at the winning block
+    shape, sweep the per-pass unroll factor (the instruction-stream knob —
+    paper §5's decode-width probe).  The two axes are swept sequentially,
+    not as a cross product: block shape sets the memory-path tiling first,
+    unroll then packs the issue path at that tiling.  Compiled cases are
+    shared through one Runner, so the unroll leg re-times nothing that
+    already traced.
 
     interpret=True on CPU (kernel-body semantics validated); on real TPU pass
     interpret=False for wall-clock-meaningful numbers.
@@ -51,8 +66,19 @@ def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
                          reps=reps, warmup=1, interpret=interpret)
         table[rows] = runner.run(spec).points[0].gbps
     best = max(table, key=table.get)
+    best_unroll, unroll_table = 1, None
+    if tune_unroll:
+        unroll_table = {}
+        for u in CANDIDATE_UNROLLS:
+            spec = BenchSpec(mixes=(mix,), sizes=(nbytes,), dtype=dtype_s,
+                             backend="pallas", block_rows=best, passes=u,
+                             unroll=u, reps=reps, warmup=1,
+                             interpret=interpret)
+            unroll_table[u] = runner.run(spec).points[0].gbps
+        best_unroll = max(unroll_table, key=unroll_table.get)
     return TuneResult(nbytes=nbytes, dtype=dtype_s, mix=mix,
-                      best_rows=best, table=table)
+                      best_rows=best, table=table,
+                      best_unroll=best_unroll, unroll_table=unroll_table)
 
 
 def _innermost_capacity(model) -> int | None:
@@ -97,4 +123,16 @@ def choose_block_rows(nbytes: int, cache_path: str | Path | None = None,
         return int(d.get("best_rows", default))
     if model is not None:
         return model_block_rows(model, default=default)
+    return default
+
+
+def choose_unroll(cache_path: str | Path | None = None,
+                  default: int = 1) -> int:
+    """The unroll companion to ``choose_block_rows``: consult a cached
+    ``sweep_block_shapes(tune_unroll=True)`` result, else the no-unroll
+    default (there is no model-derived fallback — issue width is fitted by
+    ``repro.istream``, not documented in the spec tables)."""
+    if cache_path and Path(cache_path).exists():
+        d = json.loads(Path(cache_path).read_text())
+        return int(d.get("best_unroll", default))
     return default

@@ -68,18 +68,69 @@ def _perturb(x, acc):
     return x.at[(0,) * x.ndim].add(eps)
 
 
-@partial(jax.jit, static_argnames=("passes",))
-def k_load_sum(x, passes: int):
+def _pass_loop(step, passes: int, unroll: int, init):
+    """The measurement pass loop, partially unrolled: ``unroll`` chained
+    copies of ``step`` per fori_loop trip (``passes / unroll`` trips).  The
+    decode/issue-width probe: fewer loop-control instructions per byte moved,
+    identical bytes/flops.  ``unroll=1`` is the plain loop.  ``passes`` must
+    be a multiple of ``unroll`` (BenchSpec validates explicit passes; the
+    Runner rounds auto-picked passes up)."""
+    if passes % unroll:
+        raise ValueError(
+            f"passes={passes} is not a multiple of unroll={unroll}")
+    if unroll == 1:
+        return jax.lax.fori_loop(0, passes, step, init)
+
+    def body(i, carry):
+        for _ in range(unroll):         # chained: the sweeps stay ordered
+            carry = step(i, carry)
+        return carry
+
+    return jax.lax.fori_loop(0, passes // unroll, body, init)
+
+
+def _row_chunks(x, interleave: int):
+    """Split rows into ``interleave`` equal chunks — one independent
+    dependence chain each.  Data-dependent divisibility surfaces here."""
+    rows = x.shape[0]
+    if rows % interleave:
+        raise ValueError(
+            f"interleave={interleave} does not divide {rows} rows")
+    return x.reshape(interleave, rows // interleave, *x.shape[1:])
+
+
+@partial(jax.jit, static_argnames=("passes", "unroll"))
+def k_load_sum(x, passes: int, unroll: int = 1):
     def body(_, carry):
         x, acc = carry
         acc = acc + jnp.sum(x, dtype=jnp.float32)
         return (_perturb(x, acc), acc)
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
     return acc
 
 
-@partial(jax.jit, static_argnames=("passes",))
-def k_copy(x, passes: int):
+@partial(jax.jit, static_argnames=("passes", "unroll", "interleave"))
+def k_load_sum_istream(x, passes: int, unroll: int = 1, interleave: int = 2):
+    """load_sum with ``interleave`` independent accumulator chains, one per
+    row chunk, combined only after the sweep — same bytes and (to within the
+    final combine) the same flops as k_load_sum, but the dependence critical
+    path is the chunk reduction, not the whole-buffer reduction."""
+    def body(_, carry):
+        x, acc = carry
+        xs = _row_chunks(x, interleave)
+        parts = [jnp.sum(xs[j], dtype=jnp.float32)
+                 for j in range(interleave)]    # independent chains
+        s = parts[0]
+        for p in parts[1:]:                     # combined after the sweep
+            s = s + p
+        acc = acc + s
+        return (_perturb(x, acc), acc)
+    _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("passes", "unroll"))
+def k_copy(x, passes: int, unroll: int = 1):
     def body(i, carry):
         x, y, acc = carry
         scale = (1.0 + acc * 0e0).astype(x.dtype)   # forces y to depend on acc
@@ -88,12 +139,30 @@ def k_copy(x, passes: int):
         return (x, y, acc)
     x0 = x
     y0 = jnp.zeros_like(x)
-    _, y, acc = jax.lax.fori_loop(0, passes, body, (x0, y0, jnp.float32(0)))
+    _, y, acc = _pass_loop(body, passes, unroll, (x0, y0, jnp.float32(0)))
     return acc + y.reshape(-1)[-1].astype(jnp.float32)
 
 
-@partial(jax.jit, static_argnames=("passes", "depth"))
-def k_fma(x, passes: int, depth: int):
+@partial(jax.jit, static_argnames=("passes", "unroll", "interleave"))
+def k_copy_istream(x, passes: int, unroll: int = 1, interleave: int = 2):
+    """copy with the store stream split into ``interleave`` independent
+    per-chunk streams (same bytes; the chunk stores carry no cross-chunk
+    dependence)."""
+    def body(i, carry):
+        x, y, acc = carry
+        scale = (1.0 + acc * 0e0).astype(x.dtype)
+        xs = _row_chunks(x, interleave)
+        y = jnp.concatenate([xs[j] * scale for j in range(interleave)],
+                            axis=0)
+        acc = acc + y.reshape(-1)[0].astype(jnp.float32)
+        return (x, y, acc)
+    _, y, acc = _pass_loop(body, passes, unroll,
+                           (x, jnp.zeros_like(x), jnp.float32(0)))
+    return acc + y.reshape(-1)[-1].astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("passes", "depth", "unroll"))
+def k_fma(x, passes: int, depth: int, unroll: int = 1):
     def body(_, carry):
         x, acc = carry
         v = x.astype(jnp.float32)
@@ -103,24 +172,24 @@ def k_fma(x, passes: int, depth: int):
             v = v * a + b
         acc = acc + jnp.sum(v)
         return (_perturb(x, acc), acc)
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
     return acc
 
 
-@partial(jax.jit, static_argnames=("passes",))
-def k_mxu(x, w, passes: int):
+@partial(jax.jit, static_argnames=("passes", "unroll"))
+def k_mxu(x, w, passes: int, unroll: int = 1):
     """x: (rows, 128); w: (128, 128) — one matmul per pass (MXU analogue)."""
     def body(_, carry):
         x, acc = carry
         y = jnp.dot(x, w, preferred_element_type=jnp.float32)
         acc = acc + jnp.sum(y[:1, :1])
         return (_perturb(x, acc), acc)
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
     return acc
 
 
-@partial(jax.jit, static_argnames=("streams", "passes"))
-def k_strided_sum(x, streams: int, passes: int):
+@partial(jax.jit, static_argnames=("streams", "passes", "unroll"))
+def k_strided_sum(x, streams: int, passes: int, unroll: int = 1):
     """load_sum over S interleaved strided address streams (C3 — the paper's
     multi-pointer addressing study; stride defeats the linear prefetcher)."""
     def body(_, carry):
@@ -130,12 +199,12 @@ def k_strided_sum(x, streams: int, passes: int):
             s = s + jnp.sum(x[k::streams], dtype=jnp.float32)
         eps = (s * 1e-30).astype(x.dtype).reshape(())
         return (x.at[0, 0].add(eps), acc + s)
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
     return acc
 
 
-@partial(jax.jit, static_argnames=("rows", "passes"))
-def k_blocked_sum(x, rows: int, passes: int):
+@partial(jax.jit, static_argnames=("rows", "passes", "unroll"))
+def k_blocked_sum(x, rows: int, passes: int, unroll: int = 1):
     """load_sum walking the buffer in (rows, lanes) blocks (C4 — the
     LD1D/LD2D/LD4D registers-per-load analogue)."""
     n_blocks = x.shape[0] // rows
@@ -151,12 +220,12 @@ def k_blocked_sum(x, rows: int, passes: int):
         eps = (s * 1e-30).astype(x.dtype).reshape(())
         return (x.at[0, 0].add(eps), acc + s)
 
-    _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+    _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
     return acc
 
 
-@partial(jax.jit, static_argnames=("passes",))
-def k_rw(streams, outs, passes: int):
+@partial(jax.jit, static_argnames=("passes", "unroll"))
+def k_rw(streams, outs, passes: int, unroll: int = 1):
     """The R:W ratio family: R read streams combined triad-style, the result
     stored to W write streams (paper: store-path attribution — the relation
     between loads and stores, not raw volume, sets the rate).
@@ -191,40 +260,82 @@ def k_rw(streams, outs, passes: int):
         outs = tuple(v + jnp.asarray(w, v.dtype) * eps
                      for w in range(len(outs)))
         return (outs, acc + v.reshape(-1)[0].astype(jnp.float32))
-    outs, acc = jax.lax.fori_loop(0, passes, body, (outs, jnp.float32(0)))
+    outs, acc = _pass_loop(body, passes, unroll, (outs, jnp.float32(0)))
     return acc + sum(o.reshape(-1)[-1].astype(jnp.float32) for o in outs)
 
 
-@partial(jax.jit, static_argnames=("passes",))
-def k_triad(a, b, c, passes: int):
+@partial(jax.jit, static_argnames=("passes", "unroll", "interleave"))
+def k_rw_istream(streams, outs, passes: int, unroll: int = 1,
+                 interleave: int = 2):
+    """k_rw with the R-stream combine split into ``interleave`` independent
+    row-chunk folds, concatenated before the W stores — identical values and
+    accounting to k_rw (rw_2to1 at interleave=1 degenerates to it), shorter
+    dependence chains per sweep."""
+    def body(_, carry):
+        outs, acc = carry
+        eps = (acc * 1e-30).astype(streams[0].dtype)
+        coef = jnp.asarray(RW_COMBINE_COEF, streams[0].dtype) + eps
+        chunked = [_row_chunks(s, interleave) for s in streams]
+        vs = []
+        for j in range(interleave):             # independent fold chains
+            v = chunked[0][j] + eps
+            for s in chunked[1:]:
+                v = v + coef * s[j]
+            vs.append(v)
+        v = jnp.concatenate(vs, axis=0)         # combined before the stores
+        outs = tuple(v + jnp.asarray(w, v.dtype) * eps
+                     for w in range(len(outs)))
+        return (outs, acc + v.reshape(-1)[0].astype(jnp.float32))
+    outs, acc = _pass_loop(body, passes, unroll, (outs, jnp.float32(0)))
+    return acc + sum(o.reshape(-1)[-1].astype(jnp.float32) for o in outs)
+
+
+@partial(jax.jit, static_argnames=("passes", "unroll"))
+def k_triad(a, b, c, passes: int, unroll: int = 1):
     """STREAM triad a = b + s*c with a self-dependence chaining the passes."""
     def body(_, carry):
         a, acc = carry
         a = b + 1.5 * c + a * 1e-30          # triad with self-dependence
         return (a, acc + a[0, 0].astype(jnp.float32))
-    a, acc = jax.lax.fori_loop(0, passes, body, (a, jnp.float32(0)))
+    a, acc = _pass_loop(body, passes, unroll, (a, jnp.float32(0)))
     return acc
 
 
-def run_mix(mix_name: str, x, passes: int, w=None):
+def run_mix(mix_name: str, x, passes: int, w=None, unroll: int = 1,
+            interleave: int = 1):
+    if interleave > 1:
+        # only the mixes with an interleaved variant (independent per-chunk
+        # dependence chains); the bench backends gate this before timing
+        if mix_name == "load_sum":
+            return k_load_sum_istream(x, passes, unroll, interleave)
+        if mix_name == "copy":
+            return k_copy_istream(x, passes, unroll, interleave)
+        if mix_name.startswith("rw_"):
+            from repro.bench.mixes import get_mix
+            reads, writes = get_mix(mix_name).rw
+            return k_rw_istream(rw_streams(x, reads), (x,) * writes, passes,
+                                unroll, interleave)
+        raise KeyError(
+            f"mix {mix_name!r} has no interleaved (interleave > 1) variant; "
+            f"interleavable mixes: load_sum, copy, rw_RtoW")
     if mix_name == "load_sum":
-        return k_load_sum(x, passes)
+        return k_load_sum(x, passes, unroll)
     if mix_name == "copy":
-        return k_copy(x, passes)
+        return k_copy(x, passes, unroll)
     if mix_name == "mxu":
         if w is None:
             w = jnp.eye(x.shape[-1], dtype=x.dtype)
-        return k_mxu(x, w, passes)
+        return k_mxu(x, w, passes, unroll)
     if mix_name == "triad":
-        return k_triad(jnp.zeros_like(x), x, x * 0.5, passes)
+        return k_triad(jnp.zeros_like(x), x, x * 0.5, passes, unroll)
     if mix_name.startswith("fma_"):
-        return k_fma(x, passes, int(mix_name.split("_")[1]))
+        return k_fma(x, passes, int(mix_name.split("_")[1]), unroll)
     if mix_name.startswith("rw_"):
         # convenience path: companions built here, INSIDE any timing — the
         # bench backends bind their own streams outside the timed call
         from repro.bench.mixes import get_mix
         reads, writes = get_mix(mix_name).rw
-        return k_rw(rw_streams(x, reads), (x,) * writes, passes)
+        return k_rw(rw_streams(x, reads), (x,) * writes, passes, unroll)
     raise KeyError(mix_name)
 
 

@@ -1,0 +1,38 @@
+"""repro.istream — the instruction-stream microscope (see README.md here).
+
+The paper's headline finding is that instruction fetch/decode width — not
+cache bandwidth — throttles cache-resident workloads.  This subsystem
+reproduces that *second axis* for the TPU/XLA port, OSACA-style:
+
+    extract   parse the compiled HLO of a bench case (the Runner's cached
+              compiled cases, lowered via jax.jit(...).lower().compile()),
+              count loads/stores/arithmetic per pass-loop iteration, and
+              compute the dependence critical path
+    analyze   per-case InstructionProfile (cached beside the Runner's
+              compiled-case cache, keyed by the same knob dict) +
+              throughput-vs-latency bound estimates
+    classify  join measured GB/s points with their instruction profiles
+              (and optionally a characterize.FittedMachineModel) to label
+              every point bandwidth-bound vs issue-bound with a margin
+
+Entry points: ``python -m repro.bench istream`` (CLI),
+``benchmarks/fig6_istream.py`` (the fig6 table), or::
+
+    from repro.istream import run_istream
+    report = run_istream(backends=("xla", "pallas"),
+                         mixes=("copy", "rw_2to1"))
+    print(report.table)
+"""
+from repro.istream.analyze import (InstructionProfile,  # noqa: F401
+                                   ProfileCache, analyze_case, bounds,
+                                   fit_issue_rate)
+from repro.istream.classify import (IStreamReport, classify_points,  # noqa: F401
+                                    render_fig6, run_istream,
+                                    synthetic_check)
+from repro.istream.extract import (HloModule, extract_profile,  # noqa: F401
+                                   parse_hlo)
+
+__all__ = ["InstructionProfile", "ProfileCache", "analyze_case", "bounds",
+           "fit_issue_rate", "IStreamReport", "classify_points",
+           "render_fig6", "run_istream", "synthetic_check", "HloModule",
+           "extract_profile", "parse_hlo"]

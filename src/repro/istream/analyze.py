@@ -1,0 +1,176 @@
+"""Per-case instruction profiles: lower, extract, cache, bound.
+
+The bridge between the Runner's compiled-case world and the extractor's
+text world.  ``analyze_case`` takes the same (spec, mix, shape, dtype,
+passes) coordinates the Runner caches compiled cases under, lowers the case
+against abstract arguments (``backend.abstract_args`` — no working set is
+ever materialized for analysis), and runs ``extract.extract_profile`` over
+the optimized HLO.  Profiles are cached in a ``ProfileCache`` keyed by the
+same knob dict as the Runner's case cache (``backends.case_knobs``) *minus*
+passes: the per-iteration profile of the pass loop does not depend on how
+many trips it runs, so one extraction covers a whole passes sweep.
+
+``bounds`` turns a profile into the OSACA-style pair of estimates —
+throughput bound (issue element-ops / issue width) vs latency bound (the
+dependence critical path) — and ``fit_issue_rate`` fits the one free machine
+parameter (sustained issue element-ops/second) from measured points, the way
+``characterize.fit`` fits level bandwidths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.bench.backends import case_knobs, get_backend
+from repro.bench.spec import BenchSpec
+from repro.istream.extract import extract_profile
+
+
+@dataclass(frozen=True)
+class InstructionProfile:
+    """Per-pass-loop-iteration instruction profile of one compiled case."""
+    mix: str
+    backend: str
+    shape: tuple
+    dtype: str
+    nbytes: int                 # working-set bytes (joins against BenchPoint)
+    unroll: int
+    interleave: int
+    per_iter: dict              # loads/stores/arith/move/ops/opcodes
+    critical_path: float        # dependence chain per iteration (op-levels)
+    trips: int                  # at the passes it was extracted under
+    passes: int                 # the passes it was extracted under
+    loop: str | None            # HLO name of the pass loop (None = no loop)
+
+    @property
+    def issue_elems_per_iter(self) -> float:
+        """Element-ops the issue path must sustain per loop iteration."""
+        c = self.per_iter
+        return c["loads"] + c["stores"] + c["arith"] + c["move"]
+
+    def issue_elems_per_call(self, passes: int | None = None) -> float:
+        """Element-ops per timed call: one iteration covers ``unroll``
+        passes, so a call at ``passes`` runs passes/unroll iterations."""
+        p = self.passes if passes is None else passes
+        return self.issue_elems_per_iter * max(p // max(self.unroll, 1), 1)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shape"] = list(d["shape"])
+        return d
+
+
+def profile_join_key(backend: str, mix: str, unroll: int, interleave: int,
+                     nbytes: int) -> tuple:
+    """The coordinates shared by a BenchPoint and its profile — how
+    ``classify`` joins measured throughput with extracted instructions."""
+    return (backend, mix, unroll, interleave, nbytes)
+
+
+def point_join_key(p) -> tuple:
+    return profile_join_key(p.backend, p.mix, p.unroll, p.interleave,
+                            p.nbytes)
+
+
+class ProfileCache:
+    """Extraction results keyed like the Runner's compiled-case cache but
+    passes-free (the per-iteration profile is trip-count-invariant)."""
+
+    def __init__(self):
+        self._profiles: dict[tuple, InstructionProfile] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, spec: BenchSpec, mix, shape, dtype) -> tuple:
+        mix_name = getattr(mix, "name", mix)
+        return (spec.backend, mix_name, tuple(shape), str(dtype),
+                case_knobs(spec))
+
+    def get(self, spec, mix, shape, dtype) -> InstructionProfile | None:
+        prof = self._profiles.get(self.key(spec, mix, shape, dtype))
+        if prof is not None:
+            self.hits += 1
+        return prof
+
+    def put(self, spec, mix, shape, dtype,
+            prof: InstructionProfile) -> InstructionProfile:
+        self.misses += 1
+        self._profiles[self.key(spec, mix, shape, dtype)] = prof
+        return prof
+
+    def __len__(self) -> int:
+        return len(self._profiles)
+
+
+def analyze_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
+                 runner=None, cache: ProfileCache | None = None
+                 ) -> InstructionProfile:
+    """Extract the instruction profile of one compiled bench case.
+
+    Reuses ``runner``'s compiled-case cache when given (the case the Runner
+    timed IS the case analyzed — no second trace); otherwise compiles fresh.
+    The lowering uses ``backend.abstract_args`` so no working-set buffer is
+    built.  Requires a make_case-style backend (xla / pallas); the mesh
+    backends shard the same oracles and are not separately profiled.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.bench.mixes import get_mix
+
+    backend = get_backend(spec.backend)
+    if not hasattr(backend, "abstract_args"):
+        raise TypeError(f"backend {spec.backend!r} exposes no abstract_args; "
+                        f"istream analyzes the xla/pallas case backends")
+    mix = get_mix(mix_name)
+    dtype = jnp.dtype(dtype)
+    if cache is not None:
+        prof = cache.get(spec, mix, shape, dtype)
+        if prof is not None:
+            if prof.passes != passes:    # same body, different trip count
+                prof = dataclasses.replace(
+                    prof, passes=passes,
+                    trips=max(passes // max(spec.unroll, 1), 1))
+            return prof
+
+    case = (runner._case(backend, spec, mix, shape, dtype, passes)
+            if runner is not None
+            else backend.make_case(spec, mix, shape, dtype, passes))
+    args = backend.abstract_args(spec, mix, shape, dtype)
+    hlo = jax.jit(case).lower(*args).compile().as_text()
+    expected_trips = max(passes // max(spec.unroll, 1), 1)
+    raw = extract_profile(hlo, expected_trips=expected_trips)
+    n_elems = 1
+    for d in shape:
+        n_elems *= d
+    prof = InstructionProfile(
+        mix=mix.name, backend=spec.backend, shape=tuple(shape),
+        dtype=str(dtype), nbytes=n_elems * dtype.itemsize,
+        unroll=spec.unroll, interleave=spec.interleave,
+        per_iter=raw["per_iter"], critical_path=raw["critical_path"],
+        trips=raw["trips"], passes=passes, loop=raw["loop"])
+    if cache is not None:
+        cache.put(spec, mix, shape, dtype, prof)
+    return prof
+
+
+def bounds(profile: InstructionProfile, issue_width: float = 8.0) -> dict:
+    """OSACA-style per-iteration bound pair: the throughput bound is the
+    issue element-ops divided by the machine's issue width (how long a
+    width-``issue_width`` issue path needs, in op-levels), the latency bound
+    is the dependence critical path.  The larger one names the regime the
+    *compiled code shape* predicts — before any measurement."""
+    tp = profile.issue_elems_per_iter / max(issue_width, 1e-12)
+    lat = profile.critical_path
+    return {"throughput_bound": tp, "latency_bound": lat,
+            "bound": "throughput" if tp >= lat else "latency"}
+
+
+def fit_issue_rate(pairs) -> float:
+    """Fit the sustained issue rate (element-ops/second) from measured
+    (BenchPoint, InstructionProfile) pairs: the fastest point sets the
+    demonstrated capability, exactly like a measured-bandwidth fit takes the
+    best sustained GB/s.  Returns 0.0 when nothing is fittable."""
+    rates = [prof.issue_elems_per_call(p.passes) / p.mean_s
+             for p, prof in pairs
+             if prof is not None and p.mean_s > 0]
+    return max(rates, default=0.0)

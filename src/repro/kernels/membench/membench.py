@@ -26,13 +26,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _mix_body(mix: str, depth: int, blk, w=None):
+def _mix_body(mix: str, depth: int, blk, w=None, interleave: int = 1):
     """blk: (rows, 128) f32 tile already in VMEM.  Returns scalar contribution."""
     if mix == "load_only":
         # touch one lane only: the DMA moved the whole tile, the VPU does ~nothing
         return blk[0, 0]
     if mix == "load_sum":
-        return jnp.sum(blk)
+        if interleave == 1:
+            return jnp.sum(blk)
+        # `interleave` independent per-chunk accumulator chains, combined
+        # only at the end (same elements summed; shorter dependence chains)
+        rr = blk.shape[0] // interleave
+        parts = [jnp.sum(blk[j * rr:(j + 1) * rr]) for j in range(interleave)]
+        s = parts[0]
+        for p in parts[1:]:
+            s = s + p
+        return s
     if mix == "fma":
         v = blk
         a = jnp.float32(1.0000001)
@@ -46,7 +55,7 @@ def _mix_body(mix: str, depth: int, blk, w=None):
     raise KeyError(mix)
 
 
-def _acc_kernel(mix: str, depth: int, *refs):
+def _acc_kernel(mix: str, depth: int, interleave: int, *refs):
     # refs order: (x_ref[, w_ref], o_ref)
     x_ref, o_ref = refs[0], refs[-1]
     w_ref = refs[1] if mix == "mxu" else None
@@ -58,11 +67,17 @@ def _acc_kernel(mix: str, depth: int, *refs):
 
     blk = x_ref[...].astype(jnp.float32)
     wv = w_ref[...].astype(jnp.float32) if w_ref is not None else None
-    o_ref[0, 0] += _mix_body(mix, depth, blk, wv)
+    o_ref[0, 0] += _mix_body(mix, depth, blk, wv, interleave)
 
 
-def _copy_kernel(x_ref, o_ref):
-    o_ref[...] = x_ref[...]
+def _copy_kernel(interleave, x_ref, o_ref):
+    if interleave == 1:
+        o_ref[...] = x_ref[...]
+        return
+    # per-chunk stores: `interleave` independent copy streams inside one tile
+    rr = x_ref.shape[0] // interleave
+    for j in range(interleave):
+        o_ref[j * rr:(j + 1) * rr, :] = x_ref[j * rr:(j + 1) * rr, :]
 
 
 def _triad_kernel(b_ref, c_ref, o_ref):
@@ -70,17 +85,26 @@ def _triad_kernel(b_ref, c_ref, o_ref):
     o_ref[...] = b_ref[...] + jnp.asarray(1.5, b_ref.dtype) * c_ref[...]
 
 
-def _rw_kernel(reads, writes, *refs):
+def _rw_kernel(reads, writes, interleave, *refs):
     """R:W ratio tile: fold R read tiles triad-style (v = s0 + c*s1 + ...),
     store v to each of W output tiles — the same ratio the xla oracle (k_rw)
-    emits, inside one grid program.  refs: R in-refs then W out-refs."""
+    emits, inside one grid program.  refs: R in-refs then W out-refs.
+    ``interleave`` > 1 folds each of the tile's row chunks independently
+    (identical values — chunked folds of an elementwise combine — with
+    shorter per-chunk dependence chains)."""
     from repro.bench.mixes import RW_COMBINE_COEF
-    v = refs[0][...]
-    coef = jnp.asarray(RW_COMBINE_COEF, v.dtype)
-    for r in range(1, reads):
-        v = v + coef * refs[r][...]
+    rr = refs[0].shape[0] // interleave
+    chunks = []
+    for j in range(interleave):
+        sl = slice(j * rr, (j + 1) * rr) if interleave > 1 else ...
+        v = refs[0][sl]
+        coef = jnp.asarray(RW_COMBINE_COEF, v.dtype)
+        for r in range(1, reads):
+            v = v + coef * refs[r][sl]
+        chunks.append((sl, v))
     for w in range(writes):
-        refs[reads + w][...] = v
+        for sl, v in chunks:
+            refs[reads + w][sl] = v
 
 
 def _stream_index_map(streams: int, n_blocks: int):
@@ -96,15 +120,22 @@ def _stream_index_map(streams: int, n_blocks: int):
 
 def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
                   block_rows: int = 128, streams: int = 1,
-                  interpret: bool = True, y=None, ys=()):
+                  interpret: bool = True, y=None, ys=(),
+                  interleave: int = 1):
     """x: (rows, 128) f32/bf16; returns scalar (load-family) or array (copy /
     triad) or tuple-of-arrays (rw family) output.  ``triad`` needs a second
     same-shape operand ``y``; ``rw_RtoW`` needs its R-1 extra read streams as
-    ``ys`` and returns its W outputs as a tuple."""
+    ``ys`` and returns its W outputs as a tuple.  ``interleave`` splits each
+    VMEM tile into independent row-chunk dependence chains (load_sum / copy /
+    rw only — the bench backend gates the rest)."""
     rows, lanes = x.shape
     assert rows % block_rows == 0, (rows, block_rows)
     n_blocks = rows // block_rows
     assert n_blocks % streams == 0, (n_blocks, streams)
+    if interleave > 1:
+        assert mix in ("load_sum", "copy") or mix.startswith("rw_"), \
+            f"mix {mix!r} has no interleaved variant"
+        assert block_rows % interleave == 0, (block_rows, interleave)
     imap = _stream_index_map(streams, n_blocks)
 
     in_specs = [pl.BlockSpec((block_rows, lanes), imap)]
@@ -119,7 +150,7 @@ def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
         assert len(ys) == reads - 1, (mix, len(ys))
         assert all(s.shape == x.shape for s in ys), mix
         return pl.pallas_call(
-            functools.partial(_rw_kernel, reads, writes),
+            functools.partial(_rw_kernel, reads, writes, interleave),
             grid=(n_blocks,),
             in_specs=in_specs * reads,
             out_specs=tuple(pl.BlockSpec((block_rows, lanes), imap)
@@ -135,7 +166,7 @@ def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
 
     if base_mix == "copy":
         return pl.pallas_call(
-            _copy_kernel,
+            functools.partial(_copy_kernel, interleave),
             grid=(n_blocks,),
             in_specs=in_specs[:1],
             out_specs=pl.BlockSpec((block_rows, lanes), imap),
@@ -155,7 +186,7 @@ def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
             interpret=interpret,
         )(x, y)
 
-    kern = functools.partial(_acc_kernel, base_mix, depth)
+    kern = functools.partial(_acc_kernel, base_mix, depth, interleave)
     return pl.pallas_call(
         kern,
         grid=(n_blocks,),

@@ -19,10 +19,13 @@ def _split_mix(mix: str, depth: int) -> tuple[str, int]:
 
 
 def make_kernel(mix: str = "load_sum", depth: int = 8, block_rows: int = 128,
-                streams: int = 1, interpret: bool = True):
+                streams: int = 1, interpret: bool = True,
+                interleave: int = 1):
     """Returns jit'd fn(x) -> jax array (scalar or array output).
 
     ``triad`` returns fn(x, y) — two read streams, one write stream.
+    ``interleave`` > 1 splits each VMEM tile into independent row-chunk
+    dependence chains (load_sum / copy / rw only).
     """
     base_mix, depth_eff = _split_mix(mix, depth)
 
@@ -39,30 +42,36 @@ def make_kernel(mix: str = "load_sum", depth: int = 8, block_rows: int = 128,
         def fnr(x, *ys):
             return membench_call(x, mix=mix, depth=depth_eff,
                                  block_rows=block_rows, streams=streams,
-                                 interpret=interpret, ys=ys)
+                                 interpret=interpret, ys=ys,
+                                 interleave=interleave)
         return fnr
 
     @jax.jit
     def fn(x):
         return membench_call(x, mix=base_mix, depth=depth_eff,
                              block_rows=block_rows, streams=streams,
-                             interpret=interpret)
+                             interpret=interpret, interleave=interleave)
 
     return fn
 
 
 def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
                       block_rows: int = 128, streams: int = 1,
-                      interpret: bool = True, passes: int = 1):
+                      interpret: bool = True, passes: int = 1,
+                      unroll: int = 1, interleave: int = 1):
     """Like make_kernel, but loops ``passes`` times over the buffer inside one
     compiled call (the paper's measurement loop) so dispatch overhead does not
     swamp cache-resident working sets.  A one-element self-dependent
     perturbation chains the iterations (defeats loop-invariant hoisting, as in
-    the XLA oracles).  Always returns a scalar fn — fn(x), or fn(x, y) for
-    ``triad``."""
+    the XLA oracles).  ``unroll`` runs that many chained kernel sweeps per
+    loop trip (``core.instruction_mix._pass_loop`` — the same unroll
+    discipline as the oracles, so accounting parity holds by construction).
+    Always returns a scalar fn — fn(x), or fn(x, y) for ``triad``."""
+    from repro.core.instruction_mix import _pass_loop
     base_mix, _ = _split_mix(mix, depth)
     one = make_kernel(mix, depth=depth, block_rows=block_rows,
-                      streams=streams, interpret=interpret)
+                      streams=streams, interpret=interpret,
+                      interleave=interleave)
 
     def _chain(x, r, acc):
         val = r if getattr(r, "ndim", 0) == 0 else r.reshape(-1)[0]
@@ -77,7 +86,7 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
                 x, acc = carry
                 x, acc = _chain(x, one(x, y), acc)
                 return (x, acc)
-            _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+            _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
             return acc
         return fn2
 
@@ -92,7 +101,7 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
                 for o in outs:
                     x, acc = _chain(x, o, acc)
                 return (x, acc)
-            _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+            _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
             return acc
         return fnr
 
@@ -102,7 +111,7 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
             x, acc = carry
             x, acc = _chain(x, one(x), acc)
             return (x, acc)
-        _, acc = jax.lax.fori_loop(0, passes, body, (x, jnp.float32(0)))
+        _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
         return acc
 
     return fn

@@ -387,11 +387,14 @@ def test_cli_compare_prints_skipped(capsys):
 def test_spec_devices_roundtrip_and_v1_backcompat():
     s = BenchSpec(mixes=("load_sum",), backend="sharded", devices=1, **TINY)
     d = json.loads(s.to_json())
-    assert d["spec_version"] == 2 and d["devices"] == 1
+    assert d["spec_version"] == 3 and d["devices"] == 1
     assert BenchSpec.from_dict(d) == s
-    old = {k: v for k, v in d.items() if k != "devices"}   # a v1 spec file
+    old = {k: v for k, v in d.items()
+           if k not in ("devices", "unroll", "interleave")}  # a v1 spec file
     old["spec_version"] = 1
     assert BenchSpec.from_dict(old).devices == 1
+    assert BenchSpec.from_dict(old).unroll == 1
+    assert BenchSpec.from_dict(old).interleave == 1
 
 
 def test_result_v1_backcompat_defaults_devices():

@@ -1,0 +1,350 @@
+"""repro.istream — HLO parser on synthetic modules (fusion inlining, while
+weighting, trip-count fallback, critical path), real compiled-case
+extraction (trips track passes; unroll halves trips), the passes-free
+ProfileCache, the OSACA-style bound pair, the classifier (synthetic census
++ fitted-model path), the fitted-model issue field (schema v2), and the
+CLI surface."""
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench import BenchSpec, Runner
+from repro.bench.result import BenchPoint, BenchResult
+from repro.istream import (InstructionProfile, ProfileCache, analyze_case,
+                           bounds, extract_profile, fit_issue_rate,
+                           parse_hlo, run_istream, synthetic_check)
+from repro.istream.classify import (BANDWIDTH_BOUND, ISSUE_BOUND,
+                                    classify_points, render_fig6)
+from repro.istream.extract import (computation_counts, critical_path,
+                                   find_pass_loop)
+
+# ---------------------------------------------------------------------------
+# synthetic HLO: a counted while whose body calls a fusion — every parser
+# feature in ~30 lines (trip count comes from the condition constant, NOT
+# a known_trip_count stamp)
+# ---------------------------------------------------------------------------
+
+SYNTH = """\
+HloModule synth
+
+%fused_add (p0: f32[64,128], p1: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %p1 = f32[64,128]{1,0} parameter(1)
+  ROOT %add.1 = f32[64,128]{1,0} add(%p0, %p1)
+}
+
+%body (arg: (f32[64,128], s32[])) -> (f32[64,128], s32[]) {
+  %arg = (f32[64,128]{1,0}, s32[]) parameter(0)
+  %gx = f32[64,128]{1,0} get-tuple-element(%arg), index=0
+  %iv = s32[] get-tuple-element(%arg), index=1
+  %fus = f32[64,128]{1,0} fusion(%gx, %gx), kind=kLoop, calls=%fused_add
+  %one = s32[] constant(1)
+  %ivp = s32[] add(%iv, %one)
+  ROOT %t = (f32[64,128]{1,0}, s32[]) tuple(%fus, %ivp)
+}
+
+%cond (arg: (f32[64,128], s32[])) -> pred[] {
+  %arg = (f32[64,128]{1,0}, s32[]) parameter(0)
+  %iv.1 = s32[] get-tuple-element(%arg), index=1
+  %limit = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv.1, %limit), direction=LT
+}
+
+ENTRY %main (x: f32[64,128]) -> f32[64,128] {
+  %x = f32[64,128]{1,0} parameter(0)
+  %c = s32[] constant(0)
+  %init = (f32[64,128]{1,0}, s32[]) tuple(%x, %c)
+  %w = (f32[64,128]{1,0}, s32[]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[64,128]{1,0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_parse_hlo_structure():
+    mod = parse_hlo(SYNTH)
+    assert mod.entry == "main"
+    assert set(mod.computations) == {"fused_add", "body", "cond", "main"}
+    body = mod.computation("body")
+    assert body.root == "t"
+    fus = body.instrs["fus"]
+    assert fus.opcode == "fusion" and fus.attrs["calls"] == "fused_add"
+    assert fus.operands == ("gx", "gx") and fus.elems == 64 * 128
+    w = mod.computation("main").instrs["w"]
+    assert w.opcode == "while"
+    assert w.attrs["body"] == "body" and w.attrs["condition"] == "cond"
+    assert w.elems == 0                     # tuple-typed result
+    assert mod.computation("cond").instrs["lt"].elems == 1
+
+
+def test_counts_inline_fusion_and_weight_while():
+    mod = parse_hlo(SYNTH)
+    from repro.istream.extract import _attach_literals
+    _attach_literals(mod, SYNTH)
+    n = 64 * 128
+    body = computation_counts(mod, "body")
+    # fusion inlined: the add reads both parameter operands and its root
+    # materializes; the scalar iv bump adds 1 arith, the tuple root skips
+    # the fusion (control) and the scalar
+    assert body.loads == 2 * n
+    assert body.arith == n + 1
+    assert body.stores == n
+    # entry weights body+cond by the condition-constant trip count (5)
+    main = computation_counts(mod, "main")
+    assert main.loads == 5 * 2 * n
+
+
+def test_critical_path_and_pass_loop():
+    mod = parse_hlo(SYNTH)
+    from repro.istream.extract import _attach_literals
+    _attach_literals(mod, SYNTH)
+    assert critical_path(mod, "fused_add") == 1.0
+    assert critical_path(mod, "body") == 1.0     # fusion lat = callee cp
+    loop = find_pass_loop(mod, expected_trips=5)
+    assert loop is not None and loop.name == "w"
+    prof = extract_profile(SYNTH, expected_trips=5)
+    assert prof["trips"] == 5 and prof["loop"] == "w"
+    assert prof["per_iter"]["loads"] == 2 * 64 * 128
+
+
+def test_known_trip_count_attr_wins():
+    stamped = SYNTH.replace(
+        "while(%init), condition=%cond, body=%body",
+        "while(%init), condition=%cond, body=%body, "
+        'backend_config={"known_trip_count":{"n":"7"}}')
+    assert extract_profile(stamped)["trips"] == 7
+
+
+def test_reduce_latency_is_log_tree():
+    hlo = """\
+HloModule r
+
+%scalar_add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[1024,128]) -> f32[] {
+  %x = f32[1024,128]{1,0} parameter(0)
+  %z = f32[] constant(0)
+  ROOT %r = f32[] reduce(%x, %z), dimensions={0,1}, to_apply=%scalar_add
+}
+"""
+    mod = parse_hlo(hlo)
+    n = 1024 * 128
+    # log2(131072) = 17 — tree depth, not element count
+    assert critical_path(mod, "main") == 17.0
+    counts = computation_counts(mod, "main")
+    assert counts.arith == n                # reduce consumes operand elems
+
+
+# ---------------------------------------------------------------------------
+# real compiled cases: trips track passes, unroll packs the body
+# ---------------------------------------------------------------------------
+
+def _lower(fn, shape=(64, 128)):
+    sds = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return jax.jit(fn).lower(sds).compile().as_text()
+
+
+def test_real_extraction_trips_and_unroll():
+    import functools
+    from repro.core import instruction_mix as im
+    p1 = extract_profile(
+        _lower(functools.partial(im.k_load_sum, passes=8, unroll=1)),
+        expected_trips=8)
+    assert p1["trips"] == 8 and p1["loop"] is not None
+    assert p1["per_iter"]["loads"] > 0 and p1["critical_path"] > 0
+    # unroll=2: half the trips, more work per iteration
+    p2 = extract_profile(
+        _lower(functools.partial(im.k_load_sum, passes=8, unroll=2)),
+        expected_trips=4)
+    assert p2["trips"] == 4
+    assert p2["per_iter"]["loads"] > p1["per_iter"]["loads"]
+
+
+def test_analyze_case_profile_cache():
+    spec = BenchSpec(mixes=("copy",), sizes=(16 * 2**10,), passes=4,
+                     reps=2, warmup=1)
+    cache = ProfileCache()
+    prof = analyze_case(spec, "copy", (32, 128), "float32", 4, cache=cache)
+    assert isinstance(prof, InstructionProfile)
+    assert prof.nbytes == 32 * 128 * 4 and prof.trips == 4
+    assert cache.misses == 1 and cache.hits == 0
+    again = analyze_case(spec, "copy", (32, 128), "float32", 4, cache=cache)
+    assert cache.hits == 1 and again == prof
+    # different passes: cache still hits (per-iter profile is trip-count
+    # free); trips rescale without re-extraction
+    p8 = analyze_case(spec, "copy", (32, 128), "float32", 8, cache=cache)
+    assert cache.hits == 2 and cache.misses == 1
+    assert p8.trips == 8 and p8.per_iter == prof.per_iter
+    # a knob change is a different profile (same key discipline as the
+    # Runner's case cache)
+    analyze_case(spec.replace(unroll=2, passes=None), "copy", (32, 128),
+                 "float32", 4, cache=cache)
+    assert cache.misses == 2
+
+
+def test_analyze_case_pallas_backend():
+    spec = BenchSpec(mixes=("copy",), sizes=(16 * 2**10,), passes=2,
+                     reps=2, warmup=1, backend="pallas")
+    prof = analyze_case(spec, "copy", (32, 128), "float32", 2)
+    assert prof.backend == "pallas"
+    assert prof.issue_elems_per_iter > 0
+
+
+def test_bounds_pair():
+    prof = InstructionProfile(
+        mix="copy", backend="xla", shape=(8, 128), dtype="float32",
+        nbytes=4096, unroll=1, interleave=1,
+        per_iter={"loads": 60.0, "stores": 20.0, "arith": 20.0,
+                  "move": 0.0, "ops": 3, "opcodes": {}},
+        critical_path=5.0, trips=4, passes=4, loop="w")
+    wide = bounds(prof, issue_width=100.0)
+    narrow = bounds(prof, issue_width=8.0)
+    assert wide["bound"] == "latency" and narrow["bound"] == "throughput"
+    assert narrow["throughput_bound"] == pytest.approx(100.0 / 8.0)
+    assert wide["latency_bound"] == 5.0
+
+
+def test_fit_issue_rate_takes_best_point():
+    prof = InstructionProfile(
+        mix="copy", backend="xla", shape=(8, 128), dtype="float32",
+        nbytes=4096, unroll=1, interleave=1,
+        per_iter={"loads": 100.0, "stores": 0.0, "arith": 0.0,
+                  "move": 0.0, "ops": 1, "opcodes": {}},
+        critical_path=1.0, trips=4, passes=4, loop="w")
+    mk = lambda s: dataclasses.replace(
+        _pt(4096, 1.0, 1.0, "copy"), mean_s=s)
+    assert fit_issue_rate([(mk(1e-3), prof), (mk(1e-4), prof),
+                           (mk(0.0), prof), (mk(1e-2), None)]) \
+        == pytest.approx(400 / 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# classifier
+# ---------------------------------------------------------------------------
+
+def _pt(nbytes, bpc, gbps, mix, backend="xla", mean_s=1e-3):
+    return BenchPoint(nbytes=nbytes, mix=mix, dtype="float32",
+                      backend=backend, passes=4, streams=1, block_rows=None,
+                      reps=2, bytes_per_call=bpc, flops_per_call=0.0,
+                      mean_s=mean_s, std_s=0.0, min_s=mean_s, gbps=gbps,
+                      gflops=0.0)
+
+
+def test_synthetic_check_sees_both_labels():
+    chk = synthetic_check()
+    assert chk["ok"], chk
+    assert chk["census"] == {BANDWIDTH_BOUND: 1, ISSUE_BOUND: 1}
+    assert chk["issue_rate"] > 0
+
+
+def test_classifier_uses_fitted_model():
+    """With a FittedMachineModel the bandwidth comes from the level that
+    holds the working set and the issue rate from the schema-v2 issue
+    field — no self-calibration."""
+    from repro.characterize.fit import FittedMachineModel, LevelFit
+    model = FittedMachineModel(
+        levels=(LevelFit("L1", 64 * 2**10, None,
+                         {"copy": {"gbps": 100.0, "ci": None, "n": 4}}),
+                LevelFit("DRAM", None, None,
+                         {"copy": {"gbps": 10.0, "ci": None, "n": 4}})),
+        issue={"rate_elems_per_s": 1e9})
+    prof = InstructionProfile(
+        mix="copy", backend="xla", shape=(64, 128), dtype="float32",
+        nbytes=32 * 2**10, unroll=1, interleave=1,
+        per_iter={"loads": 5e5, "stores": 0.0, "arith": 0.0, "move": 0.0,
+                  "ops": 1, "opcodes": {}},
+        critical_path=1.0, trips=4, passes=4, loop="w")
+    from repro.istream.analyze import profile_join_key
+    # 2e6 issue elems @1e9/s = 2ms issue vs 32KiB*4 @100GB/s = 1.3us mem
+    res = BenchResult(points=[_pt(32 * 2**10, 4 * 32 * 2**10, 0.1, "copy")])
+    out = classify_points(
+        res, {profile_join_key("xla", "copy", 1, 1, 32 * 2**10): prof},
+        model=model)
+    (p,) = out.points
+    assert p.istream["label"] == ISSUE_BOUND
+    assert p.istream["mem_time_s"] == pytest.approx(
+        4 * 32 * 2**10 / 100e9)
+    assert out.meta["istream"]["issue_rate_elems_per_s"] == 1e9
+    # table renders the classified row
+    table = render_fig6(out)
+    assert ISSUE_BOUND in table and "| xla | copy |" in table
+
+
+def test_fitted_model_issue_field_roundtrip():
+    """Schema v2: the issue dict survives JSON; v1 files load with None."""
+    from repro.characterize.fit import (FITTED_SCHEMA_VERSION,
+                                        FittedMachineModel)
+    assert FITTED_SCHEMA_VERSION == 2
+    m = FittedMachineModel(issue={"rate_elems_per_s": 2.5e12,
+                                  "source": "istream"})
+    d = json.loads(m.to_json())
+    assert d["schema_version"] == 2
+    back = FittedMachineModel.from_dict(d)
+    assert back.issue == m.issue
+    v1 = {k: v for k, v in d.items() if k != "issue"}
+    v1["schema_version"] = 1
+    old = FittedMachineModel.from_dict(v1)
+    assert old.issue is None and old.schema_version == 1
+
+
+# ---------------------------------------------------------------------------
+# the driver + CLI surface
+# ---------------------------------------------------------------------------
+
+def test_run_istream_xla_minimal():
+    report = run_istream(backends=("xla",), mixes=("copy",),
+                         sizes=(16 * 2**10,), unrolls=(1, 2),
+                         interleaves=(1,), reps=2)
+    pts = report.result.points
+    assert len(pts) == 2 and all(p.istream is not None for p in pts)
+    assert {p.unroll for p in pts} == {1, 2}
+    assert report.issue_rate > 0
+    assert len(report.profiles) == 2
+    assert "| backend | mix |" in report.table
+    # annotated result survives the v4 JSON round-trip
+    back = BenchResult.from_dict(json.loads(report.result.to_json()))
+    assert back.schema_version == 4
+    assert back.points[0].istream["label"] in (BANDWIDTH_BOUND, ISSUE_BOUND)
+
+
+def test_cli_istream(tmp_path):
+    from repro.bench import cli
+    out = tmp_path / "ist.json"
+    rc = cli.main(["istream", "--backends", "xla", "--mixes", "copy",
+                   "--sizes", "16K", "--unrolls", "1,2",
+                   "--interleaves", "1", "--reps", "2",
+                   "--out", str(out)])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert d["schema_version"] == 4
+    assert d["points"] and all(p["istream"] is not None
+                               for p in d["points"])
+    assert d["meta"]["istream"]["issue_rate_elems_per_s"] > 0
+
+
+def test_cli_istream_rejects_bad_knob():
+    from repro.bench import cli
+    rc = cli.main(["istream", "--backends", "xla", "--mixes", "fma_8",
+                   "--sizes", "16K", "--interleaves", "2"])
+    assert rc == 2                          # gate error -> exit code 2
+
+
+def test_autotune_unroll_objective(tmp_path):
+    from repro.core.autotune import (CANDIDATE_UNROLLS, choose_unroll,
+                                     sweep_block_shapes)
+    r = sweep_block_shapes(16 * 2**10, reps=2, tune_unroll=True)
+    assert r.best_unroll in CANDIDATE_UNROLLS
+    assert set(r.unroll_table) == set(CANDIDATE_UNROLLS)
+    cache = tmp_path / "tune.json"
+    cache.write_text(json.dumps({"best_rows": r.best_rows,
+                                 "best_unroll": r.best_unroll}))
+    assert choose_unroll(cache) == r.best_unroll
+    assert choose_unroll(None) == 1

@@ -1,0 +1,33 @@
+"""repro.audit — static accounting verifier + ECM analytic predictor.
+
+Two consumers of the compiled-IR extractor (``repro.istream.extract``) that
+need no timing at all (see README.md here):
+
+    verify   declared bytes/flops (the mix registry) vs observed compiled
+             traffic, for every mix x backend x knob combination — with
+             explicit detection of hoisted / dead-code-eliminated timed
+             work and formula lint over the registry itself
+    ecm      Execution-Cache-Memory-style per-pass time prediction from a
+             profile + FittedMachineModel (issue term vs per-level transfer
+             terms), validated against measurement (fig3) and consumed by
+             ``core.autotune`` as a block-shape prefilter
+
+Entry points: ``python -m repro.bench audit`` (CLI; exit 0 clean, 2 on an
+accounting violation) and ``tests/test_audit.py`` (registry-parametrized
+lint, runs deviceless off golden HLO fixtures in ``tests/data/hlo/``).
+"""
+from repro.audit.ecm import (EcmPrediction, ecm_filter_rows,  # noqa: F401
+                             ecm_predict, predict_block_rows, validate_ecm)
+from repro.audit.verify import (EXIT_OK, EXIT_VIOLATION,  # noqa: F401
+                                AuditReport, CaseAudit, Check, audit_case,
+                                audit_counts, audit_goldens, audit_hlo,
+                                audit_registry, default_knob_grid,
+                                expected_counts, lint_mix, random_rw_pairs,
+                                waiver_reason, write_goldens)
+
+__all__ = ["AuditReport", "CaseAudit", "Check", "EXIT_OK", "EXIT_VIOLATION",
+           "EcmPrediction", "audit_case", "audit_counts", "audit_goldens",
+           "audit_hlo", "audit_registry", "default_knob_grid",
+           "ecm_filter_rows", "ecm_predict", "expected_counts", "lint_mix",
+           "predict_block_rows", "random_rw_pairs", "validate_ecm",
+           "waiver_reason", "write_goldens"]

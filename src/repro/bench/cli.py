@@ -12,6 +12,9 @@ launch.
     istream     instruction-stream microscope: unroll x interleave sweep ->
                 compiled-HLO instruction profiles -> bandwidth-vs-issue-bound
                 classification + fig6 table (repro.istream)
+    audit       static accounting verifier: declared bytes/flops vs compiled
+                IR for every mix x backend x knob combination, no timing;
+                exit 0 clean, 2 on violation (repro.audit)
     launch      spawn N coordinated local processes running ``run --backend
                 distributed`` with forced host devices — the single-machine
                 simulation of a multi-host Fig-4 scaling study
@@ -86,6 +89,22 @@ def _add_spec_flags(p: argparse.ArgumentParser):
                    help="per-pass unroll factor (istream knob)")
     p.add_argument("--interleave", type=int, default=None,
                    help="independent dependence chains (istream knob)")
+
+
+def _add_grid_flags(p: argparse.ArgumentParser):
+    """The knob-grid flags shared by the two compiled-IR commands
+    (``istream`` sweeps the grid with timing, ``audit`` without) — one
+    parser helper so the two surfaces cannot drift apart."""
+    p.add_argument("--backends", "--backend", default=None,
+                   help="comma list (default: xla,pallas)")
+    p.add_argument("--mixes", "--mix", default=None,
+                   help="comma list (default: per-command representative set)")
+    p.add_argument("--sizes", default=None,
+                   help="comma list, K/M/G ok: 64K,1M")
+    p.add_argument("--unrolls", default=None,
+                   help="comma list of unroll factors")
+    p.add_argument("--interleaves", default=None,
+                   help="comma list of chain counts")
 
 
 def cmd_run(args) -> int:
@@ -267,6 +286,58 @@ def cmd_istream(args) -> int:
     return 0
 
 
+def cmd_audit(args) -> int:
+    """Static accounting audit (see repro.audit): declared bytes/flops vs
+    compiled-IR observation for every registered mix x backend x knob
+    combination.  Exit 0 clean, 2 on any accounting violation (each named
+    by its mix/backend/knob triple).  ``--goldens DIR`` audits compiled-HLO
+    text fixtures instead of lowering (deviceless CI path);
+    ``--write-goldens DIR`` regenerates those fixtures."""
+    from repro.audit import (audit_goldens, audit_registry, write_goldens)
+
+    if args.write_goldens:
+        manifest = write_goldens(args.write_goldens)
+        print(f"# wrote {len(manifest['cases'])} golden HLO fixtures "
+              f"-> {args.write_goldens}")
+        return 0
+    if args.goldens:
+        report = audit_goldens(args.goldens)
+    else:
+        kw: dict = dict(smoke=args.smoke, rw_pairs=args.rw_pairs,
+                        seed=args.seed)
+        if args.backends:
+            kw["backends"] = tuple(args.backends.split(","))
+        if args.mixes:
+            kw["mixes"] = tuple(args.mixes.split(","))
+        if args.sizes:
+            nbytes = _parse_sizes(args.sizes)[0]
+            kw["shape"] = (max(nbytes // (128 * 4), 8), 128)
+        grid = None
+        if args.unrolls or args.interleaves:
+            grid = [{}]
+            grid += [{"unroll": int(u)}
+                     for u in (args.unrolls or "").split(",") if u and int(u) > 1]
+            grid += [{"interleave": int(i)}
+                     for i in (args.interleaves or "").split(",")
+                     if i and int(i) > 1]
+        if grid is not None:
+            kw["knob_grid"] = grid
+        report = audit_registry(**kw)
+    if args.json:
+        print(report.to_json())
+    else:
+        print(report.table())
+    if args.out:
+        report.to_json(args.out)
+        print(f"# saved audit report ({len(report.cases)} cases) "
+              f"-> {args.out}")
+    for v in report.violations:
+        print(f"error: accounting violation at {v.where()}: "
+              + "; ".join(f"{c.name}: {c.detail}" for c in v.failures),
+              file=sys.stderr)
+    return report.exit_code()
+
+
 def cmd_launch(args) -> int:
     """Spawn N coordinated local processes running ``run`` with the same
     spec flags (see bench.distributed.launch_local).  All children share one
@@ -358,16 +429,7 @@ def main(argv=None) -> int:
     p_ist.add_argument("--smoke", action="store_true",
                        help="CI gate: synthetic classifier self-test + "
                             "seconds-scale end-to-end sweep")
-    p_ist.add_argument("--backends", default=None,
-                       help="comma list (default: xla,pallas)")
-    p_ist.add_argument("--mixes", "--mix", default=None,
-                       help="comma list (default: copy,rw_2to1)")
-    p_ist.add_argument("--sizes", default=None,
-                       help="comma list, K/M/G ok: 64K,1M")
-    p_ist.add_argument("--unrolls", default=None,
-                       help="comma list of unroll factors (default: 1,2)")
-    p_ist.add_argument("--interleaves", default=None,
-                       help="comma list of chain counts (default: 1,2)")
+    _add_grid_flags(p_ist)
     p_ist.add_argument("--reps", type=int, default=None)
     p_ist.add_argument("--model", default=None,
                        help="FittedMachineModel JSON for bandwidth lookup "
@@ -375,6 +437,29 @@ def main(argv=None) -> int:
     p_ist.add_argument("--out", default=None,
                        help="write the classified result JSON here")
     p_ist.set_defaults(fn=cmd_istream)
+
+    p_aud = sub.add_parser(
+        "audit",
+        help="declared vs compiled accounting verification (exit 2 on "
+             "violation; see repro.audit)",
+        allow_abbrev=False)
+    p_aud.add_argument("--smoke", action="store_true",
+                       help="CI fast-fail: representative mixes, base knobs")
+    _add_grid_flags(p_aud)
+    p_aud.add_argument("--rw-pairs", dest="rw_pairs", type=int, default=0,
+                       help="additionally audit N random rw_RtoW members")
+    p_aud.add_argument("--seed", type=int, default=0,
+                       help="seed for --rw-pairs sampling")
+    p_aud.add_argument("--goldens", default=None,
+                       help="audit compiled-HLO fixtures in this directory "
+                            "(deviceless; e.g. tests/data/hlo)")
+    p_aud.add_argument("--write-goldens", dest="write_goldens", default=None,
+                       help="regenerate the golden HLO fixtures here")
+    p_aud.add_argument("--json", action="store_true",
+                       help="print the full JSON report instead of the table")
+    p_aud.add_argument("--out", default=None,
+                       help="write the audit report JSON here")
+    p_aud.set_defaults(fn=cmd_audit)
 
     p_launch = sub.add_parser(
         "launch", help="N coordinated local processes (multi-host simulation)",

@@ -107,6 +107,33 @@ class FittedMachineModel:
                 return l.capacity_bytes
         return None
 
+    @property
+    def issue_rate(self) -> Optional[float]:
+        """Fitted sustained issue rate (element-ops/s, schema v2) — the
+        ECM predictor's in-core term denominator."""
+        return (self.issue or {}).get("rate_elems_per_s")
+
+    def level_path(self, nbytes: int) -> list[LevelFit]:
+        """Hierarchy prefix a working set of ``nbytes`` streams through:
+        innermost level up to (and including) its residence level — the
+        first level whose measured capacity holds it, else the outermost.
+        The ECM predictor sums per-level transfer times over this path."""
+        path: list[LevelFit] = []
+        for l in self.levels:
+            path.append(l)
+            if l.capacity_bytes and nbytes <= l.capacity_bytes:
+                break
+        return path
+
+    def bandwidth_for(self, level: LevelFit, mix: str | None = None
+                      ) -> Optional[float]:
+        """Measured bandwidth of ``level`` in B/s — the mix's own cell when
+        measured there, else the level's best mix (penalties are already a
+        separate field; the ECM consumer wants an absolute number)."""
+        cell = level.bandwidth.get(mix) if mix else None
+        gbps = cell["gbps"] if cell else level.best_gbps
+        return gbps * 1e9 if gbps else None
+
     def to_hardware_spec(self) -> HardwareSpec:
         """Detected topology as a HardwareSpec (measured best-mix bandwidth
         in the ``read_bw`` slot, B/s) — drop-in for the static tables."""

@@ -33,11 +33,14 @@ class TuneResult:
     table: dict  # rows -> GB/s
     best_unroll: int = 1
     unroll_table: dict | None = None    # unroll -> GB/s (at best_rows)
+    ecm: dict | None = None   # prefilter provenance: predicted / kept / pruned
 
 
 def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
                        reps: int = 8, interpret: bool = True,
-                       tune_unroll: bool = False) -> TuneResult:
+                       tune_unroll: bool = False, model=None,
+                       ecm_keep: int | None = None,
+                       runner=None) -> TuneResult:
     """Run the *Pallas* membench kernels across block shapes via the bench
     Runner (one BenchSpec per candidate row count; C4 of the paper).
 
@@ -49,18 +52,34 @@ def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
     shared through one Runner, so the unroll leg re-times nothing that
     already traced.
 
+    ``model`` + ``ecm_keep``: prune the candidate ladder with the ECM
+    analytic predictor (``repro.audit.ecm``) before timing anything — only
+    the ``ecm_keep`` candidates with the best predicted throughput get
+    timed; the pruned rows and their predictions land in ``TuneResult.ecm``
+    so the saving is auditable, never silent.
+
     interpret=True on CPU (kernel-body semantics validated); on real TPU pass
     interpret=False for wall-clock-meaningful numbers.
     """
     from repro.bench import BenchSpec, Runner
     from repro.core import buffers
     dtype_s = str(jnp.dtype(dtype))
+    itemsize = jnp.dtype(dtype).itemsize
     rows_total = buffers.working_set_shape(nbytes, dtype=dtype)[0]
-    runner = Runner()
+    runner = runner or Runner()
+    candidates = tuple(r for r in CANDIDATE_ROWS
+                       if r <= rows_total and not rows_total % r)
+    ecm_info = None
+    if model is not None and ecm_keep:
+        from repro.audit.ecm import ecm_filter_rows
+        kept, predicted = ecm_filter_rows(nbytes, model, candidates,
+                                          keep=ecm_keep, mix=mix,
+                                          itemsize=itemsize)
+        ecm_info = {"predicted_gbps": predicted, "kept": list(kept),
+                    "pruned": [r for r in candidates if r not in kept]}
+        candidates = kept
     table = {}
-    for rows in CANDIDATE_ROWS:
-        if rows > rows_total or rows_total % rows:
-            continue
+    for rows in candidates:
         spec = BenchSpec(mixes=(mix,), sizes=(nbytes,), dtype=dtype_s,
                          backend="pallas", block_rows=rows, passes=1,
                          reps=reps, warmup=1, interpret=interpret)
@@ -78,7 +97,8 @@ def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
         best_unroll = max(unroll_table, key=unroll_table.get)
     return TuneResult(nbytes=nbytes, dtype=dtype_s, mix=mix,
                       best_rows=best, table=table,
-                      best_unroll=best_unroll, unroll_table=unroll_table)
+                      best_unroll=best_unroll, unroll_table=unroll_table,
+                      ecm=ecm_info)
 
 
 def _innermost_capacity(model) -> int | None:

@@ -102,10 +102,10 @@ class ProfileCache:
         return len(self._profiles)
 
 
-def analyze_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
-                 runner=None, cache: ProfileCache | None = None
-                 ) -> InstructionProfile:
-    """Extract the instruction profile of one compiled bench case.
+def lower_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
+               runner=None) -> str:
+    """Optimized compiled-HLO text of one bench case — the shared lowering
+    step under ``analyze_case`` and ``repro.audit`` (golden generation).
 
     Reuses ``runner``'s compiled-case cache when given (the case the Runner
     timed IS the case analyzed — no second trace); otherwise compiles fresh.
@@ -123,6 +123,45 @@ def analyze_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
                         f"istream analyzes the xla/pallas case backends")
     mix = get_mix(mix_name)
     dtype = jnp.dtype(dtype)
+    case = (runner._case(backend, spec, mix, shape, dtype, passes)
+            if runner is not None
+            else backend.make_case(spec, mix, shape, dtype, passes))
+    args = backend.abstract_args(spec, mix, shape, dtype)
+    return jax.jit(case).lower(*args).compile().as_text()
+
+
+def profile_from_hlo(hlo: str, spec: BenchSpec, mix_name: str, shape, dtype,
+                     passes: int) -> InstructionProfile:
+    """Extract + package: compiled-HLO text -> InstructionProfile (the
+    deviceless half of ``analyze_case``, shared with the audit goldens)."""
+    import jax.numpy as jnp
+    from repro.bench.mixes import get_mix
+
+    mix = get_mix(mix_name)
+    dtype = jnp.dtype(dtype)
+    expected_trips = max(passes // max(spec.unroll, 1), 1)
+    raw = extract_profile(hlo, expected_trips=expected_trips)
+    n_elems = 1
+    for d in shape:
+        n_elems *= d
+    return InstructionProfile(
+        mix=mix.name, backend=spec.backend, shape=tuple(shape),
+        dtype=str(dtype), nbytes=n_elems * dtype.itemsize,
+        unroll=spec.unroll, interleave=spec.interleave,
+        per_iter=raw["per_iter"], critical_path=raw["critical_path"],
+        trips=raw["trips"], passes=passes, loop=raw["loop"])
+
+
+def analyze_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
+                 runner=None, cache: ProfileCache | None = None
+                 ) -> InstructionProfile:
+    """Extract the instruction profile of one compiled bench case
+    (``lower_case`` -> ``profile_from_hlo``, with profile caching)."""
+    import jax.numpy as jnp
+    from repro.bench.mixes import get_mix
+
+    mix = get_mix(mix_name)
+    dtype = jnp.dtype(dtype)
     if cache is not None:
         prof = cache.get(spec, mix, shape, dtype)
         if prof is not None:
@@ -132,22 +171,8 @@ def analyze_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
                     trips=max(passes // max(spec.unroll, 1), 1))
             return prof
 
-    case = (runner._case(backend, spec, mix, shape, dtype, passes)
-            if runner is not None
-            else backend.make_case(spec, mix, shape, dtype, passes))
-    args = backend.abstract_args(spec, mix, shape, dtype)
-    hlo = jax.jit(case).lower(*args).compile().as_text()
-    expected_trips = max(passes // max(spec.unroll, 1), 1)
-    raw = extract_profile(hlo, expected_trips=expected_trips)
-    n_elems = 1
-    for d in shape:
-        n_elems *= d
-    prof = InstructionProfile(
-        mix=mix.name, backend=spec.backend, shape=tuple(shape),
-        dtype=str(dtype), nbytes=n_elems * dtype.itemsize,
-        unroll=spec.unroll, interleave=spec.interleave,
-        per_iter=raw["per_iter"], critical_path=raw["critical_path"],
-        trips=raw["trips"], passes=passes, loop=raw["loop"])
+    hlo = lower_case(spec, mix_name, shape, dtype, passes, runner=runner)
+    prof = profile_from_hlo(hlo, spec, mix_name, shape, dtype, passes)
     if cache is not None:
         cache.put(spec, mix, shape, dtype, prof)
     return prof

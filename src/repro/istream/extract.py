@@ -13,10 +13,26 @@ Counting conventions (the documented limits — see README.md):
 * everything is weighted in *elements*, not instructions: an ``add`` over
   f32[64,128] counts 8192 arithmetic element-ops (what a fixed-width vector
   unit must issue), a scalar bookkeeping add counts 1.
-* loads = elements read from parameter/loop-state arrays (slicing consumers
-  count their result elements, not the whole operand).
+* **fusions compute output-wise**: a kLoop fusion whose root is a scalar
+  only evaluates the one element its root demands, however many full-shape
+  intermediate instructions appear inside.  Counts inside fused computations
+  are therefore *demand-weighted* — demand propagates backwards from the
+  fusion root (a scalar root demands 1 element of each full-shape operand
+  chain; a full root demands everything).  Region-level (while body / entry)
+  instructions always execute in full and are counted at full shape.
+* loads = elements read from materialized buffers: parameter/loop-state
+  arrays everywhere, plus — at region level, where every instruction output
+  is a buffer — reads of non-free producer results (a standalone
+  reduce-window re-reading a fusion's materialized output is real traffic).
 * stores = elements materialized per iteration: dynamic-update-slice updates
-  plus computation roots that produce arrays (fusion outputs are written).
+  (the in-place target is neither read nor re-written), fused-computation
+  roots (fusion outputs are written), and region-level non-free results.
+* ``dot`` counts 2*K arithmetic element-ops per output element (the
+  multiply-accumulate depth of the contraction), not its operand size.
+* unrecognized opcodes are counted as arithmetic (conservative: the issue
+  path cannot silently shrink) but raise a loud ``UnknownOpcodeWarning``
+  and land in the ``unknown`` bucket so compiler upgrades cannot quietly
+  skew audit or classify results.
 * the critical path uses a unit latency per element-op level, ``log2(n)``
   for reductions (tree depth), zero for free ops (tuples, bitcasts,
   reshapes) — relative chain lengths, not cycles.
@@ -25,6 +41,7 @@ from __future__ import annotations
 
 import math
 import re
+import warnings
 from dataclasses import dataclass, field
 
 # -- opcode categories ------------------------------------------------------
@@ -43,6 +60,32 @@ MOVE_OPS = frozenset({
 SLICING_OPS = frozenset({"slice", "dynamic-slice", "get-tuple-element"})
 CONTROL_OPS = frozenset({"while", "fusion", "call", "conditional",
                          "custom-call"})
+#: elementwise arithmetic the extractor recognizes explicitly — anything not
+#: in one of the category sets is an *unknown* opcode (see
+#: UnknownOpcodeWarning), not silently arithmetic
+ARITH_OPS = frozenset({
+    "add", "subtract", "multiply", "divide", "negate", "abs", "sign",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "sqrt",
+    "rsqrt", "cbrt", "power", "maximum", "minimum", "compare", "select",
+    "and", "or", "xor", "not", "convert", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "tanh", "sine", "cosine",
+    "tan", "atan2", "is-finite", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "remainder", "stochastic-convert", "erf",
+    "logistic", "popcnt", "count-leading-zeros", "real", "imag", "complex",
+    "map", "rng", "rng-bit-generator",
+})
+
+KNOWN_OPS = FREE_OPS | REDUCE_OPS | MOVE_OPS | CONTROL_OPS | ARITH_OPS
+
+
+class UnknownOpcodeWarning(UserWarning):
+    """An HLO opcode outside every category set was counted as arithmetic.
+
+    Compiler upgrades introduce opcodes; counting them silently would skew
+    the audit and the bandwidth-vs-issue-bound classifier without a trace.
+    The count still lands in ``arith`` (conservative — issue work cannot
+    silently shrink) and is echoed in ``OpCounts.unknown``.
+    """
 
 
 @dataclass(frozen=True)
@@ -187,6 +230,7 @@ class OpCounts:
     move: float = 0.0
     ops: int = 0                    # unweighted non-free HLO instructions
     opcodes: dict = field(default_factory=dict)
+    unknown: dict = field(default_factory=dict)   # opcode -> element count
 
     def add(self, other: "OpCounts", weight: float = 1.0) -> None:
         self.loads += weight * other.loads
@@ -196,6 +240,8 @@ class OpCounts:
         self.ops += int(weight * other.ops)
         for k, v in other.opcodes.items():
             self.opcodes[k] = self.opcodes.get(k, 0) + int(weight * v)
+        for k, v in other.unknown.items():
+            self.unknown[k] = self.unknown.get(k, 0) + weight * v
 
     @property
     def issue_elems(self) -> float:
@@ -205,7 +251,8 @@ class OpCounts:
     def to_dict(self) -> dict:
         return {"loads": self.loads, "stores": self.stores,
                 "arith": self.arith, "move": self.move, "ops": self.ops,
-                "opcodes": dict(self.opcodes)}
+                "opcodes": dict(self.opcodes),
+                "unknown": dict(self.unknown)}
 
 
 def _trip_count(module: HloModule, instr: HloInstr) -> int:
@@ -224,23 +271,118 @@ def _trip_count(module: HloModule, instr: HloInstr) -> int:
     return 1
 
 
+def _dot_depth(comp: HloComputation, instr: HloInstr) -> float:
+    """Contraction depth K of a ``dot``: (M,K) x (K,N) -> (M,N) has
+    ``op0.elems * op1.elems / result.elems == K**2``."""
+    if len(instr.operands) < 2 or not instr.elems:
+        return 1.0
+    a = comp.instrs.get(instr.operands[0])
+    b = comp.instrs.get(instr.operands[1])
+    if not a or not b or not a.elems or not b.elems:
+        return 1.0
+    k_sq = a.elems * b.elems / instr.elems
+    return math.sqrt(k_sq) if k_sq > 0 else 1.0
+
+
+def _operand_demand(instr: HloInstr, idx: int, src: HloInstr,
+                    d: float) -> float:
+    """Elements of operand ``idx`` one execution of ``instr`` touches when
+    ``d`` elements of ``instr``'s result are demanded.  This single table
+    drives both the backward demand propagation inside fused computations
+    and the element-weighted load counting."""
+    op = instr.opcode
+    src_full = float(max(src.elems, 1))
+    full = float(max(instr.elems, 1))
+    if op in ("slice", "dynamic-slice"):
+        return d if idx == 0 else 1.0
+    if op == "dynamic-update-slice":
+        if idx == 0:
+            return 0.0              # in-place target: passed through, not read
+        if idx == 1:
+            return min(src_full, max(d, 1.0))
+        return 1.0                  # start indices
+    if op in REDUCE_OPS:            # every input element feeds the output
+        return src_full * d / full
+    if op == "broadcast":
+        return min(src_full, d)
+    if op == "concatenate":
+        return src_full * d / full
+    if op in CONTROL_OPS:           # fusion/call/while read via their callees
+        return src_full
+    if op == "tuple":
+        return src_full
+    return min(src_full, d)         # elementwise / reshape-like default
+
+
+def _demand_map(comp: HloComputation) -> dict[str, float]:
+    """Backward demand propagation from the root of a *fused* computation:
+    how many elements of each instruction the fusion actually evaluates.
+    kLoop fusions compute output-wise, so a scalar root demands one element
+    of each full-shape chain feeding it, not the whole arrays."""
+    demand: dict[str, float] = {n: 0.0 for n in comp.instrs}
+    root = comp.instrs.get(comp.root)
+    if root is None:
+        return demand
+    if root.opcode == "tuple":      # multi-output fusion: all outputs full
+        for o in root.operands:
+            src = comp.instrs.get(o)
+            if src is not None:
+                demand[o] += float(max(src.elems, 1))
+    else:
+        demand[comp.root] = float(max(root.elems, 1))
+    # definition order is topological; reversed, every consumer is visited
+    # before its operands, so demand has fully accumulated by then
+    for iname in reversed(list(comp.instrs)):
+        instr = comp.instrs[iname]
+        cap = float(instr.elems) if instr.elems else float("inf")
+        d = min(demand.get(iname, 0.0), cap)
+        if d <= 0:
+            continue
+        for idx, o in enumerate(instr.operands):
+            src = comp.instrs.get(o)
+            if src is not None:
+                demand[o] = demand.get(o, 0.0) \
+                    + _operand_demand(instr, idx, src, d)
+    return demand
+
+
 def computation_counts(module: HloModule, name: str,
-                       memo: dict | None = None) -> OpCounts:
+                       memo: dict | None = None,
+                       virtual: bool = False) -> OpCounts:
     """Element-weighted counts for one execution of a computation, fusions
-    inlined and nested whiles weighted by their trip counts."""
+    inlined and nested whiles weighted by their trip counts.
+
+    ``virtual=True`` means the computation is the body of a fusion: its
+    instructions live in registers (no buffer reads/writes except params and
+    the root) and are demand-weighted from the root.  ``virtual=False``
+    (region/entry level) counts every instruction at full shape and treats
+    every non-free result as a materialized buffer (written once, read by
+    each non-free consumer)."""
     memo = {} if memo is None else memo
-    if name in memo:
-        return memo[name]
-    memo[name] = OpCounts()        # cycle guard (malformed input)
+    key = (name, virtual)
+    if key in memo:
+        return memo[key]
+    memo[key] = OpCounts()         # cycle guard (malformed input)
     comp = module.computation(name)
     counts = OpCounts()
-    for instr in comp.instrs.values():
+    demand = _demand_map(comp) if virtual else None
+    for iname, instr in comp.instrs.items():
         op = instr.opcode
         counts.opcodes[op] = counts.opcodes.get(op, 0) + 1
+        full = float(max(instr.elems, 1))
+        if virtual:
+            cap = float(instr.elems) if instr.elems else float("inf")
+            d = min(demand.get(iname, 0.0), cap)
+            if d <= 0 and op not in FREE_OPS:
+                continue            # dead inside the fusion: never evaluated
+            d = max(d, 1.0)
+        else:
+            d = full
         if op in ("fusion", "call"):
             callee = instr.attrs.get("calls") or instr.attrs.get("to_apply")
             if callee and callee in module.computations:
-                counts.add(computation_counts(module, callee, memo))
+                counts.add(computation_counts(module, callee, memo,
+                                              virtual=True))
             counts.ops += 1
         elif op == "while":
             trips = _trip_count(module, instr)
@@ -253,46 +395,70 @@ def computation_counts(module: HloModule, name: str,
             counts.ops += 1
         elif op in FREE_OPS:
             continue
+        elif op in CONTROL_OPS:     # conditional / custom-call: opaque
+            counts.ops += 1
         else:
             counts.ops += 1
-            if op in REDUCE_OPS:
+            if op in ("dot", "convolution"):
+                counts.arith += d * 2.0 * _dot_depth(comp, instr)
+            elif op in REDUCE_OPS:
                 src = comp.instrs.get(instr.operands[0]) \
                     if instr.operands else None
-                counts.arith += src.elems if src and src.elems else \
-                    max(instr.elems, 1)
+                in_elems = src.elems if src and src.elems else full
+                counts.arith += in_elems * d / full
             elif op in MOVE_OPS:
                 if op == "dynamic-update-slice" and len(instr.operands) > 1:
                     upd = comp.instrs.get(instr.operands[1])
-                    counts.move += upd.elems if upd else 1
-                    counts.stores += upd.elems if upd else 1
+                    u = upd.elems if upd and upd.elems else 1
+                    counts.move += u
+                    counts.stores += u
                 else:
-                    counts.move += max(instr.elems, 1)
-            else:                               # elementwise arithmetic
-                counts.arith += max(instr.elems, 1)
-            # loads: reads of parameter / carried-loop-state arrays
-            for o in instr.operands:
+                    counts.move += d
+            elif op in ARITH_OPS:
+                counts.arith += d
+            else:                   # unrecognized: loud, conservative
+                warnings.warn(
+                    f"unrecognized HLO opcode {op!r} in computation "
+                    f"{name!r}: counted as arithmetic ({d:.0f} elems)",
+                    UnknownOpcodeWarning, stacklevel=2)
+                counts.arith += d
+                counts.unknown[op] = counts.unknown.get(op, 0.0) + d
+            # loads: reads of materialized buffers — parameters and carried
+            # loop state everywhere; at region level also the outputs of
+            # non-free producers (every region-level result is a buffer)
+            for idx, o in enumerate(instr.operands):
                 src = comp.instrs.get(o)
-                if src and src.opcode in ("parameter", "get-tuple-element") \
-                        and src.elems > 1:
-                    counts.loads += (max(instr.elems, 1)
-                                     if op in SLICING_OPS else src.elems)
-    # materialized root: a non-free array root (fusion output) is written
-    root = comp.instrs.get(comp.root)
-    if root is not None:
-        if root.opcode == "tuple":
-            seen = set()
-            for o in root.operands:
-                src = comp.instrs.get(o)
-                if (src and o not in seen and src.elems > 1
-                        and src.opcode not in FREE_OPS
-                        and src.opcode not in CONTROL_OPS
-                        and src.opcode != "dynamic-update-slice"):
-                    counts.stores += src.elems
-                    seen.add(o)
-        elif (root.opcode not in FREE_OPS
-              and root.opcode not in CONTROL_OPS):
-            counts.stores += max(root.elems, 1)
-    memo[name] = counts
+                if src is None or src.elems <= 1:
+                    continue
+                is_buffer = src.opcode in ("parameter", "get-tuple-element") \
+                    or (not virtual and src.opcode not in FREE_OPS)
+                if is_buffer:
+                    counts.loads += _operand_demand(instr, idx, src, d)
+            # stores: every region-level non-free result is a written buffer
+            # (dynamic-update-slice writes only its update, counted above)
+            if (not virtual and instr.elems > 1
+                    and op != "dynamic-update-slice"):
+                counts.stores += full
+    if virtual:
+        # materialized root: the fusion's output buffer is written (a DUS
+        # root aliases its target in place — the update is already counted)
+        root = comp.instrs.get(comp.root)
+        if root is not None:
+            if root.opcode == "tuple":
+                seen = set()
+                for o in root.operands:
+                    src = comp.instrs.get(o)
+                    if (src and o not in seen and src.elems > 1
+                            and src.opcode not in FREE_OPS
+                            and src.opcode not in CONTROL_OPS
+                            and src.opcode != "dynamic-update-slice"):
+                        counts.stores += src.elems
+                        seen.add(o)
+            elif (root.opcode not in FREE_OPS
+                  and root.opcode not in CONTROL_OPS
+                  and root.opcode != "dynamic-update-slice"):
+                counts.stores += max(root.elems, 1)
+    memo[key] = counts
     return counts
 
 

@@ -66,7 +66,17 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
     the XLA oracles).  ``unroll`` runs that many chained kernel sweeps per
     loop trip (``core.instruction_mix._pass_loop`` — the same unroll
     discipline as the oracles, so accounting parity holds by construction).
-    Always returns a scalar fn — fn(x), or fn(x, y) for ``triad``."""
+    Always returns a scalar fn — fn(x), or fn(x, y) for ``triad``.
+
+    Mixes whose kernel produces array outputs (copy / triad / rw) loop-carry
+    those outputs through the pass loop: while-loop state must be fully
+    materialized every iteration, so interpret-mode XLA cannot narrow the
+    timed sweep down to the one element the accumulator consumes (without
+    the carry, the whole copy kernel dead-code-eliminates on CPU and the
+    measurement times an empty loop — the repro.audit DCE finding; on real
+    TPU the opaque pallas_call never had this hazard, and the carry only
+    aliases the output buffer the kernel writes anyway).
+    """
     from repro.core.instruction_mix import _pass_loop
     base_mix, _ = _split_mix(mix, depth)
     one = make_kernel(mix, depth=depth, block_rows=block_rows,
@@ -79,34 +89,60 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
         eps = (acc * 1e-30).astype(x.dtype).reshape(())
         return x.at[(0,) * x.ndim].add(eps), acc
 
+    def _last(r):
+        val = r if getattr(r, "ndim", 0) == 0 else r.reshape(-1)[-1]
+        return val.astype(jnp.float32)
+
+    def _perturb(t, acc):
+        eps = (acc * 1e-30).astype(t.dtype).reshape(())
+        return t.at[(0,) * t.ndim].add(eps)
+
+    def _carried(call, x, extra):
+        """Pass loop with the kernel outputs in the while-loop carry."""
+        out0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            jax.eval_shape(call, x, *extra))
+
+        def body(_, carry):
+            x, extra, outs, acc = carry
+            outs = call(x, *extra)
+            for o in jax.tree.leaves(outs):
+                x, acc = _chain(x, o, acc)
+            # Extra read streams must be perturbed too: a loop-invariant
+            # operand lets XLA hoist its arithmetic (e.g. triad's a*y scale)
+            # out of the timed loop, halving the executed flops.
+            extra = tuple(_perturb(e, acc) for e in extra)
+            # The barrier pins each unrolled sweep: without it, only the
+            # LAST sweep's outputs are live in the carry and interpret-mode
+            # XLA narrows every interior sweep to the one element the
+            # perturbation chain consumes (unroll>=2 would time ~1 sweep).
+            return jax.lax.optimization_barrier((x, extra, outs, acc))
+
+        _, _, outs, acc = _pass_loop(body, passes, unroll,
+                                     (x, tuple(extra), out0, jnp.float32(0)))
+        for o in jax.tree.leaves(outs):    # consume: the carry must stay live
+            acc = acc + _last(o)
+        return acc
+
     if base_mix == "triad":
         @jax.jit
         def fn2(x, y):
-            def body(_, carry):
-                x, acc = carry
-                x, acc = _chain(x, one(x, y), acc)
-                return (x, acc)
-            _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
-            return acc
+            return _carried(one, x, (y,))
         return fn2
 
     if mix.startswith("rw_"):
         @jax.jit
         def fnr(x, *ys):
-            def body(_, carry):
-                x, acc = carry
-                outs = one(x, *ys)
-                # keep every write stream live: fold each output's first
-                # element into the chained accumulator
-                for o in outs:
-                    x, acc = _chain(x, o, acc)
-                return (x, acc)
-            _, acc = _pass_loop(body, passes, unroll, (x, jnp.float32(0)))
-            return acc
+            return _carried(one, x, ys)
         return fnr
 
+    if base_mix == "copy":
+        @jax.jit
+        def fnc(x):
+            return _carried(one, x, ())
+        return fnc
+
     @jax.jit
-    def fn(x):
+    def fn(x):                 # scalar-output mixes: nothing to narrow
         def body(_, carry):
             x, acc = carry
             x, acc = _chain(x, one(x), acc)

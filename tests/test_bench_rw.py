@@ -175,7 +175,9 @@ def _xla_reference(name, x64, p):
 
 def _pallas_reference(name, x64, p, block_rows):
     """What the pallas timed kernels accumulate (block-accumulator grid for
-    the load family, array outputs scalar-ized via their first element)."""
+    the load family; array outputs are loop-carried — folded in at their
+    first element each pass, plus the final carry's last element, the same
+    consumption convention as the xla ``k_copy``/``k_rw`` oracles)."""
     m = get_mix(name)
     lead = x64[::block_rows, 0].sum()          # one lane per visited block
     if name == "load_only":
@@ -183,15 +185,16 @@ def _pallas_reference(name, x64, p, block_rows):
     if name == "load_sum":
         return p * x64.sum()
     if name == "copy":
-        return p * x64[0, 0]
+        return p * x64[0, 0] + x64[-1, -1]
     if name == "triad":
-        return p * 1.75 * x64[0, 0]
+        return p * 1.75 * x64[0, 0] + 1.75 * x64[-1, -1]
     if name == "mxu":
         return p * lead                        # blk @ eye accumulates [0, 0]
     if m.fma_depth:
         return p * _fma_chain(x64, m.fma_depth).sum()
     if m.rw is not None:
-        return p * m.rw[1] * _rw_combined(x64, m.rw[0])[0, 0]
+        v = _rw_combined(x64, m.rw[0])
+        return p * m.rw[1] * v[0, 0] + m.rw[1] * v[-1, -1]
     raise KeyError(name)
 
 

@@ -8,6 +8,12 @@ margin.  Cache-resident sizes should trend issue-bound (the working set is
 cheap to move, the issue path is the limiter); DRAM-resident sizes
 bandwidth-bound.
 
+Caption note: since the rotating-carry fix, carried-mix (copy / triad /
+rw) unroll columns are **absolute GB/s** — the accounting auditor enforces
+that unroll=u moves u x one sweep's declared traffic, and each table row's
+``traffic`` column records that provenance (``audited``).  Only rows with
+a documented waiver (e.g. chunked interleave>1) remain issue-axis shapes.
+
 This script is a thin declaration over ``repro.istream.run_istream`` — the
 sweep grid is the only thing decided here.  A fitted machine model
 (``python -m repro.bench characterize --out model.json``) sharpens the

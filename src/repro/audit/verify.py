@@ -72,14 +72,13 @@ def waiver_reason(mix: MixDef, backend: str,
     *waived*: observed counts reported, never failed) — or None when the
     case is fully checkable.  Every waiver names a calibrated, documented
     behavior; the list doubles as the repo's known-measurement-caveats
-    registry (see audit/README.md):
+    registry (see audit/README.md).
 
-    * carried-mix unroll: a mix with write streams (copy / rw / triad)
-      cannot be soundly unrolled in functional IR — each unrolled sweep's
-      outputs are dead except the last one's (only the final carry is loop
-      state), so XLA narrows every interior sweep to the one element the
-      perturbation chain consumes and ``unroll=u`` times ~1/u of the
-      declared traffic.  Surfaced BY this auditor; tracked in ROADMAP.
+    The ``unroll`` knob carries NO waiver: since the rotating-carry fix
+    (every unrolled sweep's outputs are live loop state on both backends),
+    carried-mix unroll is fully checkable — ``expected_counts`` covers the
+    unroll axis and the auditor enforces per-pass traffic ≈ u× one sweep.
+
     * chunked interleave variants (``k_*_istream`` / chunked kernel
       bodies) restructure traffic per chunk (partial materialization,
       chunk-level narrowing) with no closed form across (mix, chunks).
@@ -97,11 +96,9 @@ def waiver_reason(mix: MixDef, backend: str,
     interleave = knobs.get("interleave") or 1
     streams = knobs.get("streams") or 1
     multi_knob = (streams > 1 or knobs.get("block_rows") is not None)
+    del unroll   # checkable on every mix/backend since the rotating-carry fix
     if mix.name == "load_only":
         return "interpret-mode DCE of the dead load (documented caveat)"
-    if unroll > 1 and (mix.writes_per_elem > 0 or b == "pallas"):
-        return ("carried-mix unroll: interior unrolled sweeps are dead in "
-                "functional IR (~1/unroll of declared traffic executes)")
     if interleave > 1:
         return ("chunked interleave variant restructures per-chunk traffic "
                 "(no closed form)")
@@ -142,6 +139,14 @@ def expected_counts(mix: MixDef, backend: str, n: float,
       R=1 write-bearing mixes double (copy / rw_1toW read AND write both
       the input image and the W outputs), multi-read mixes share the
       emulated input (loads = (R+W-1)n for R,W >= 2).
+    * unroll (u sweeps per loop trip, rotating-carry): xla traffic is
+      u x one sweep per trip, i.e. per-pass counts are unroll-invariant.
+      In pallas interpret mode the per-TRIP emulation overheads amortize
+      across the u sweeps: the R=1/W=1 input mirror materializes once per
+      trip (loads = stores = (W + 1/u)n per pass), and mxu's emulated
+      weight-panel store + grid bookkeeping likewise divide by u
+      (stores = n + LANES^2/u, arith = (f + 4/u)n).  rw mixes with W >= 2
+      or R >= 2 and triad are unroll-flat.
 
     Returns None when no stable expectation exists (documented caveat —
     the case is *waived*, reported but never failed).
@@ -152,6 +157,7 @@ def expected_counts(mix: MixDef, backend: str, n: float,
         return None
     if waiver_reason(mix, backend, knobs) is not None:
         return None
+    u = max((knobs or {}).get("unroll") or 1, 1)
     R, W, f = mix.reads_per_elem, mix.writes_per_elem, mix.flops_per_elem
     name = mix.name
     if name.startswith("fma_"):
@@ -163,8 +169,10 @@ def expected_counts(mix: MixDef, backend: str, n: float,
         if b == "xla":
             return {"loads": loads, "stores": n, "arith": f * n}
         # interpret emulation mirrors the input+weight streams on the store
-        # side; the emulated grid adds ~4n bookkeeping arith
-        return {"loads": loads, "stores": loads, "arith": (f + 4) * n}
+        # side once per TRIP (amortized over the u sweeps); the emulated
+        # grid adds ~4n/u bookkeeping arith per pass
+        return {"loads": loads, "stores": n + LANES * LANES / u,
+                "arith": (f + 4 / u) * n}
     if name == "triad":
         return {"loads": R * n, "stores": W * n, "arith": f * n}
     if name == "copy" or mix.rw is not None:
@@ -174,6 +182,10 @@ def expected_counts(mix: MixDef, backend: str, n: float,
             return {"loads": R * W * n, "stores": W * n, "arith": 2 * R * W * n}
         # pallas interpret
         if R <= 1:
+            if W <= 1:
+                # the emulated input mirror materializes once per trip
+                mirror = (W + 1 / u) * n
+                return {"loads": mirror, "stores": mirror, "arith": f * n}
             return {"loads": (W + 1) * n, "stores": (W + 1) * n, "arith": f * n}
         if W <= 1:
             return {"loads": R * n, "stores": n, "arith": f * n}
@@ -431,9 +443,11 @@ def default_knob_grid(smoke: bool = False) -> list[dict]:
     """One-factor-at-a-time knob coverage: the base case plus each knob
     exercised alone (a full cross product would compile hundreds of cases
     for no additional formula coverage — each knob's traffic effect is
-    independent by construction)."""
+    independent by construction).  Smoke keeps the base case plus the
+    unroll axis at {2, 4} — the CI fast-fail gate that pins the
+    rotating-carry fix (carried-mix unroll is enforced, not waived)."""
     if smoke:
-        return [{}]
+        return [{}, {"unroll": 2}, {"unroll": 4}]
     # streams rides with a small block so the pallas tiling yields enough
     # blocks to split on the compact audit shape; block_rows=32 makes the
     # tiling axis non-trivial (2+ blocks) on the default 64-row shape
@@ -479,9 +493,13 @@ def audit_registry(backends=("xla", "pallas"), mixes=None, shape=(64, 128),
                 case_id = f"{backend}/{name}" + \
                     (f"[{','.join(f'{k}={v}' for k, v in sorted(knobs.items()))}]"
                      if knobs else "")
+                u = max(knobs.get("unroll", 1) or 1, 1)
                 p = passes
-                if p % max(knobs.get("unroll", 1), 1):
-                    p = passes * knobs.get("unroll", 1)
+                if p % u:
+                    p = passes * u
+                # fewer than 2 trips lets XLA fully unroll the pass loop
+                # (no loop found -> whole-module counts -> spurious noise)
+                p = max(p, 2 * u)
                 try:
                     spec = BenchSpec(mixes=(name,), sizes=(nbytes,),
                                      backend=backend, dtype=dtype, passes=p,
@@ -509,11 +527,28 @@ def audit_registry(backends=("xla", "pallas"), mixes=None, shape=(64, 128),
 # golden fixtures (deviceless CI path)
 # --------------------------------------------------------------------------
 
-GOLDEN_SET = (("load_sum", ("xla", "pallas")),
-              ("copy", ("xla", "pallas")),
-              ("triad", ("xla", "pallas")),
-              ("rw_2to1", ("xla", "pallas")),
-              ("fma_8", ("xla", "pallas")))
+# (mix, backends, unroll): the unroll>1 rows pin the rotating-carry
+# lowering for every carried-mix family head — regenerating them after a
+# kernel edit that reintroduces dead interior sweeps flips the deviceless
+# audit red with no device in the loop.
+GOLDEN_SET = (("load_sum", ("xla", "pallas"), 1),
+              ("copy", ("xla", "pallas"), 1),
+              ("triad", ("xla", "pallas"), 1),
+              ("rw_2to1", ("xla", "pallas"), 1),
+              ("fma_8", ("xla", "pallas"), 1),
+              ("copy", ("xla", "pallas"), 2),
+              ("triad", ("xla", "pallas"), 2),
+              ("rw_2to1", ("xla", "pallas"), 2),
+              ("copy", ("xla", "pallas"), 4),
+              ("triad", ("xla", "pallas"), 4),
+              ("rw_2to1", ("xla", "pallas"), 4))
+
+
+def _golden_passes(passes: int, unroll: int) -> int:
+    """Pass count for a golden case: a multiple of unroll with >= 2 trips
+    (1-trip loops get fully unrolled by XLA and lose the pass loop)."""
+    p = passes if passes % unroll == 0 else passes * unroll
+    return max(p, 2 * unroll)
 
 
 def write_goldens(out_dir, shape=(64, 128), dtype: str = "float32",
@@ -529,16 +564,22 @@ def write_goldens(out_dir, shape=(64, 128), dtype: str = "float32",
     nbytes = n * np.dtype(dtype).itemsize
     manifest = {"shape": list(shape), "dtype": dtype, "passes": passes,
                 "unroll": 1, "cases": []}
-    for name, backends in GOLDEN_SET:
+    for name, backends, unroll in GOLDEN_SET:
+        p = _golden_passes(passes, unroll)
         for backend in backends:
             spec = BenchSpec(mixes=(name,), sizes=(nbytes,), backend=backend,
-                             dtype=dtype, passes=passes, reps=2, warmup=0)
-            hlo = lower_case(spec, name, shape, dtype, passes)
+                             dtype=dtype, passes=p, reps=2, warmup=0,
+                             unroll=unroll)
+            hlo = lower_case(spec, name, shape, dtype, p)
             fname = f"{backend}__{name}__{'x'.join(map(str, shape))}" \
-                    f"__{dtype}__p{passes}.txt"
+                    f"__{dtype}__p{p}" \
+                    f"{f'__u{unroll}' if unroll > 1 else ''}.txt"
             (out_dir / fname).write_text(hlo)
-            manifest["cases"].append({"file": fname, "mix": name,
-                                      "backend": backend})
+            case = {"file": fname, "mix": name, "backend": backend}
+            if unroll > 1:
+                case["unroll"] = unroll
+                case["passes"] = p
+            manifest["cases"].append(case)
     (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
     return manifest
 
@@ -554,8 +595,11 @@ def audit_goldens(golden_dir) -> AuditReport:
                                "passes": manifest["passes"]})
     for case in manifest["cases"]:
         hlo = (golden_dir / case["file"]).read_text()
+        unroll = case.get("unroll", manifest.get("unroll", 1))
         report.cases.append(audit_hlo(
             hlo, case["mix"], case["backend"], shape,
-            dtype=manifest["dtype"], passes=manifest["passes"],
-            unroll=manifest.get("unroll", 1)))
+            dtype=manifest["dtype"],
+            passes=case.get("passes", manifest["passes"]),
+            unroll=unroll,
+            knobs={"unroll": unroll} if unroll > 1 else None))
     return report

@@ -33,6 +33,7 @@ class TuneResult:
     table: dict  # rows -> GB/s
     best_unroll: int = 1
     unroll_table: dict | None = None    # unroll -> GB/s (at best_rows)
+    unroll_audit: dict | None = None    # unroll -> waiver reason or None
     ecm: dict | None = None   # prefilter provenance: predicted / kept / pruned
 
 
@@ -85,20 +86,34 @@ def sweep_block_shapes(nbytes: int, mix: str = "load_sum", dtype=jnp.float32,
                          reps=reps, warmup=1, interpret=interpret)
         table[rows] = runner.run(spec).points[0].gbps
     best = max(table, key=table.get)
-    best_unroll, unroll_table = 1, None
+    best_unroll, unroll_table, unroll_audit = 1, None, None
     if tune_unroll:
-        unroll_table = {}
+        # The unroll objective ranks *audited* GB/s: a candidate whose
+        # (mix, backend, unroll) combination carries an accounting waiver
+        # (``repro.audit.verify.waiver_reason``) is still timed and
+        # reported, but never wins — its declared-bytes normalization is
+        # not trusted.  Since the rotating-carry fix retired the
+        # carried-mix unroll waiver, every candidate here is sound; the
+        # gate is the regression guard against that bug's return (pre-fix,
+        # unroll=u timed ~1/u of declared traffic and the phantom ~u x
+        # GB/s always crowned the largest candidate).
+        from repro.audit.verify import waiver_reason
+        from repro.bench.mixes import get_mix
+        mixdef = get_mix(mix)
+        unroll_table, unroll_audit = {}, {}
         for u in CANDIDATE_UNROLLS:
             spec = BenchSpec(mixes=(mix,), sizes=(nbytes,), dtype=dtype_s,
                              backend="pallas", block_rows=best, passes=u,
                              unroll=u, reps=reps, warmup=1,
                              interpret=interpret)
             unroll_table[u] = runner.run(spec).points[0].gbps
-        best_unroll = max(unroll_table, key=unroll_table.get)
+            unroll_audit[u] = waiver_reason(mixdef, "pallas", {"unroll": u})
+        sound = [u for u in unroll_table if unroll_audit[u] is None]
+        best_unroll = max(sound or unroll_table, key=unroll_table.get)
     return TuneResult(nbytes=nbytes, dtype=dtype_s, mix=mix,
                       best_rows=best, table=table,
                       best_unroll=best_unroll, unroll_table=unroll_table,
-                      ecm=ecm_info)
+                      unroll_audit=unroll_audit, ecm=ecm_info)
 
 
 def _innermost_capacity(model) -> int | None:

@@ -74,7 +74,17 @@ def _pass_loop(step, passes: int, unroll: int, init):
     decode/issue-width probe: fewer loop-control instructions per byte moved,
     identical bytes/flops.  ``unroll=1`` is the plain loop.  ``passes`` must
     be a multiple of ``unroll`` (BenchSpec validates explicit passes; the
-    Runner rounds auto-picked passes up)."""
+    Runner rounds auto-picked passes up).
+
+    This loop is for SCALAR-accumulator mixes only (load_sum / fma / mxu /
+    strided / blocked): every sweep's contribution folds into the carried
+    accumulator, so no sweep can be narrowed away.  Mixes whose sweeps
+    produce array outputs (copy / triad / the rw family) must use
+    ``_rotating_pass_loop`` — with this loop, only the LAST unrolled sweep's
+    outputs would be loop state and XLA narrows every interior sweep to the
+    one element the perturbation chain consumes (the dead-interior-sweep
+    bug ``repro.audit`` found; fixture
+    ``tests/data/hlo/dead_sweep_xla_copy_u4.txt`` pins the broken shape)."""
     if passes % unroll:
         raise ValueError(
             f"passes={passes} is not a multiple of unroll={unroll}")
@@ -87,6 +97,55 @@ def _pass_loop(step, passes: int, unroll: int, init):
         return carry
 
     return jax.lax.fori_loop(0, passes // unroll, body, init)
+
+
+def _rotating_pass_loop(sweep, passes: int, unroll: int, state, out0):
+    """The measurement pass loop for mixes whose sweeps produce ARRAY
+    outputs (copy / triad / the rw_RtoW family), with rotating output
+    buffers: the carry holds one output slot per unrolled sweep, sweep ``j``
+    of a trip writes slot ``j``, so EVERY sweep's full output is while-loop
+    state.  Loop state must be materialized at each iteration boundary, so
+    XLA cannot narrow an interior sweep down to the one element the
+    perturbation chain consumes — ``unroll=u`` really moves u sweeps' worth
+    of traffic per trip (enforced by ``repro.audit``; rotating-carry
+    lowering shape documented in audit/README.md).
+
+    ``sweep(i, state, out) -> (state, out_new)``: ``out`` is the most
+    recently produced output (the previous sweep's slot, wrapping to the
+    last slot of the previous trip), which is how self-dependent mixes like
+    triad chain trips.  Callers must CONSUME every returned slot (read at
+    least one element of each after the loop) or XLA's while-loop
+    simplifier is free to drop dead slots from the loop state, resurrecting
+    the bug this loop exists to fix.
+
+    ``unroll=1`` degenerates to the plain carried loop (one slot — exactly
+    the pre-rotation lowering).  ``passes`` must be a multiple of
+    ``unroll``, as in ``_pass_loop``.
+    """
+    if passes % unroll:
+        raise ValueError(
+            f"passes={passes} is not a multiple of unroll={unroll}")
+
+    def body(i, carry):
+        state, slots = carry
+        out = slots[-1]                 # the rotation point: newest slot
+        new = []
+        for _ in range(unroll):         # chained via state AND out
+            state, out = sweep(i, state, out)
+            new.append(out)
+        return (state, tuple(new))
+
+    return jax.lax.fori_loop(0, passes // unroll, body,
+                             (state, (out0,) * unroll))
+
+
+def _consume_slots(acc, slots):
+    """Fold one element of every rotating output slot into ``acc`` — the
+    post-loop consumption that keeps each slot live loop state."""
+    for out in slots:
+        for o in jax.tree_util.tree_leaves(out):
+            acc = acc + o.reshape(-1)[-1].astype(jnp.float32)
+    return acc
 
 
 def _row_chunks(x, interleave: int):
@@ -131,16 +190,15 @@ def k_load_sum_istream(x, passes: int, unroll: int = 1, interleave: int = 2):
 
 @partial(jax.jit, static_argnames=("passes", "unroll"))
 def k_copy(x, passes: int, unroll: int = 1):
-    def body(i, carry):
-        x, y, acc = carry
+    def sweep(i, carry, _y):
+        x, acc = carry
         scale = (1.0 + acc * 0e0).astype(x.dtype)   # forces y to depend on acc
         y = x * scale
         acc = acc + y.reshape(-1)[0].astype(jnp.float32)
-        return (x, y, acc)
-    x0 = x
-    y0 = jnp.zeros_like(x)
-    _, y, acc = _pass_loop(body, passes, unroll, (x0, y0, jnp.float32(0)))
-    return acc + y.reshape(-1)[-1].astype(jnp.float32)
+        return (x, acc), y
+    (_, acc), ys = _rotating_pass_loop(sweep, passes, unroll,
+                                       (x, jnp.float32(0)), jnp.zeros_like(x))
+    return _consume_slots(acc, ys)
 
 
 @partial(jax.jit, static_argnames=("passes", "unroll", "interleave"))
@@ -148,17 +206,17 @@ def k_copy_istream(x, passes: int, unroll: int = 1, interleave: int = 2):
     """copy with the store stream split into ``interleave`` independent
     per-chunk streams (same bytes; the chunk stores carry no cross-chunk
     dependence)."""
-    def body(i, carry):
-        x, y, acc = carry
+    def sweep(i, carry, _y):
+        x, acc = carry
         scale = (1.0 + acc * 0e0).astype(x.dtype)
         xs = _row_chunks(x, interleave)
         y = jnp.concatenate([xs[j] * scale for j in range(interleave)],
                             axis=0)
         acc = acc + y.reshape(-1)[0].astype(jnp.float32)
-        return (x, y, acc)
-    _, y, acc = _pass_loop(body, passes, unroll,
-                           (x, jnp.zeros_like(x), jnp.float32(0)))
-    return acc + y.reshape(-1)[-1].astype(jnp.float32)
+        return (x, acc), y
+    (_, acc), ys = _rotating_pass_loop(sweep, passes, unroll,
+                                       (x, jnp.float32(0)), jnp.zeros_like(x))
+    return _consume_slots(acc, ys)
 
 
 @partial(jax.jit, static_argnames=("passes", "depth", "unroll"))
@@ -247,8 +305,7 @@ def k_rw(streams, outs, passes: int, unroll: int = 1):
     measurement-grade store-path numbers, this oracle for semantics and
     accounting.
     """
-    def body(_, carry):
-        outs, acc = carry
+    def sweep(_, acc, outs):
         eps = (acc * 1e-30).astype(streams[0].dtype)
         # the coefficient rides on the carried accumulator so the per-stream
         # multiply (and the stream read feeding it) cannot be hoisted out of
@@ -259,9 +316,10 @@ def k_rw(streams, outs, passes: int, unroll: int = 1):
             v = v + coef * s
         outs = tuple(v + jnp.asarray(w, v.dtype) * eps
                      for w in range(len(outs)))
-        return (outs, acc + v.reshape(-1)[0].astype(jnp.float32))
-    outs, acc = _pass_loop(body, passes, unroll, (outs, jnp.float32(0)))
-    return acc + sum(o.reshape(-1)[-1].astype(jnp.float32) for o in outs)
+        return acc + v.reshape(-1)[0].astype(jnp.float32), outs
+    acc, slots = _rotating_pass_loop(sweep, passes, unroll,
+                                     jnp.float32(0), outs)
+    return _consume_slots(acc, slots)
 
 
 @partial(jax.jit, static_argnames=("passes", "unroll", "interleave"))
@@ -271,8 +329,7 @@ def k_rw_istream(streams, outs, passes: int, unroll: int = 1,
     row-chunk folds, concatenated before the W stores — identical values and
     accounting to k_rw (rw_2to1 at interleave=1 degenerates to it), shorter
     dependence chains per sweep."""
-    def body(_, carry):
-        outs, acc = carry
+    def sweep(_, acc, outs):
         eps = (acc * 1e-30).astype(streams[0].dtype)
         coef = jnp.asarray(RW_COMBINE_COEF, streams[0].dtype) + eps
         chunked = [_row_chunks(s, interleave) for s in streams]
@@ -285,20 +342,22 @@ def k_rw_istream(streams, outs, passes: int, unroll: int = 1,
         v = jnp.concatenate(vs, axis=0)         # combined before the stores
         outs = tuple(v + jnp.asarray(w, v.dtype) * eps
                      for w in range(len(outs)))
-        return (outs, acc + v.reshape(-1)[0].astype(jnp.float32))
-    outs, acc = _pass_loop(body, passes, unroll, (outs, jnp.float32(0)))
-    return acc + sum(o.reshape(-1)[-1].astype(jnp.float32) for o in outs)
+        return acc + v.reshape(-1)[0].astype(jnp.float32), outs
+    acc, slots = _rotating_pass_loop(sweep, passes, unroll,
+                                     jnp.float32(0), outs)
+    return _consume_slots(acc, slots)
 
 
 @partial(jax.jit, static_argnames=("passes", "unroll"))
 def k_triad(a, b, c, passes: int, unroll: int = 1):
-    """STREAM triad a = b + s*c with a self-dependence chaining the passes."""
-    def body(_, carry):
-        a, acc = carry
+    """STREAM triad a = b + s*c with a self-dependence chaining the passes
+    (the rotating ``out`` slot IS the self-dependent a stream)."""
+    def sweep(_, acc, a):
         a = b + 1.5 * c + a * 1e-30          # triad with self-dependence
-        return (a, acc + a[0, 0].astype(jnp.float32))
-    a, acc = _pass_loop(body, passes, unroll, (a, jnp.float32(0)))
-    return acc
+        return acc + a[0, 0].astype(jnp.float32), a
+    acc, slots = _rotating_pass_loop(sweep, passes, unroll,
+                                     jnp.float32(0), a)
+    return _consume_slots(acc, slots)
 
 
 def run_mix(mix_name: str, x, passes: int, w=None, unroll: int = 1,

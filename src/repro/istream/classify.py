@@ -64,7 +64,33 @@ def classify_points(result: BenchResult, profiles: dict,
     given.  Returns a NEW BenchResult (points are frozen; annotated copies
     replace them) with ``meta["istream"]`` recording the fit and the label
     census; unjoined points pass through with ``istream=None``.
+
+    Each annotation also records the point's *traffic provenance* from the
+    accounting auditor: ``istream["traffic"]`` is ``"audited"`` when
+    ``repro.audit`` holds an enforced compiled-traffic expectation for the
+    (mix, backend, knobs) combination — its GB/s is absolute — and
+    ``"waived"`` (with ``istream["traffic_waiver"]`` naming the caveat)
+    when the combination carries a documented waiver and the number should
+    be read as shape-only.  Since the rotating-carry fix, carried-mix
+    unroll>1 points are audited, not waived.
     """
+    import numpy as np
+    from repro.audit.verify import expected_counts, waiver_reason
+    from repro.bench.mixes import get_mix
+
+    def _traffic_status(p):
+        knobs = {"unroll": p.unroll, "interleave": p.interleave,
+                 "streams": p.streams, "block_rows": p.block_rows}
+        try:
+            mixdef = get_mix(p.mix)
+        except KeyError:
+            return None, None
+        n = p.nbytes / np.dtype(p.dtype).itemsize
+        if expected_counts(mixdef, p.backend, n, knobs) is not None:
+            return "audited", None
+        return "waived", (waiver_reason(mixdef, p.backend, knobs)
+                          or "no expectation for this backend")
+
     pairs = [(p, profiles.get(point_join_key(p))) for p in result.points]
     if issue_rate is None and model is not None:
         # schema-v2 fitted models carry the issue fit (characterize.fit)
@@ -87,8 +113,11 @@ def classify_points(result: BenchResult, profiles: dict,
         else:
             margin = float("inf")
         census[label] += 1
+        traffic, waiver = _traffic_status(p)
         points.append(dataclasses.replace(p, istream={
             "label": label,
+            "traffic": traffic,
+            "traffic_waiver": waiver,
             "margin": margin if math.isfinite(margin) else None,
             "issue_time_s": issue_time,
             "mem_time_s": mem_time if math.isfinite(mem_time) else None,
@@ -107,10 +136,16 @@ def classify_points(result: BenchResult, profiles: dict,
 
 def render_fig6(result: BenchResult) -> str:
     """The fig6 table: every classified point with its knobs, throughput,
-    regime label, and confidence margin (markdown)."""
+    regime label, confidence margin, and traffic provenance (markdown).
+
+    GB/s in ``audited`` rows is absolute — the auditor enforces that the
+    compiled code moves the declared bytes, including carried mixes at
+    unroll>1 (rotating-carry fix).  ``waived`` rows carry a documented
+    accounting caveat (e.g. chunked interleave) and should be read as
+    issue-axis shapes, not absolute throughput."""
     lines = ["| backend | mix | KiB | unroll | ilv | GB/s | label | "
-             "margin |",
-             "|---|---|---:|---:|---:|---:|---|---:|"]
+             "margin | traffic |",
+             "|---|---|---:|---:|---:|---:|---|---:|---|"]
     for p in result.points:
         info = p.istream
         if info is None:
@@ -120,7 +155,8 @@ def render_fig6(result: BenchResult) -> str:
             f"| {p.backend} | {p.mix} | {p.nbytes / 1024:.0f} "
             f"| {p.unroll} | {p.interleave} | {p.gbps:.2f} "
             f"| {info['label']} "
-            f"| {'inf' if margin is None else f'{margin:.2f}'} |")
+            f"| {'inf' if margin is None else f'{margin:.2f}'} "
+            f"| {info.get('traffic') or '-'} |")
     meta = result.meta.get("istream", {})
     rate = meta.get("issue_rate_elems_per_s")
     if rate:

@@ -69,15 +69,20 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
     Always returns a scalar fn — fn(x), or fn(x, y) for ``triad``.
 
     Mixes whose kernel produces array outputs (copy / triad / rw) loop-carry
-    those outputs through the pass loop: while-loop state must be fully
-    materialized every iteration, so interpret-mode XLA cannot narrow the
-    timed sweep down to the one element the accumulator consumes (without
-    the carry, the whole copy kernel dead-code-eliminates on CPU and the
-    measurement times an empty loop — the repro.audit DCE finding; on real
-    TPU the opaque pallas_call never had this hazard, and the carry only
-    aliases the output buffer the kernel writes anyway).
+    those outputs through the pass loop with ROTATING per-sweep slots
+    (``core.instruction_mix._rotating_pass_loop``): while-loop state must be
+    fully materialized every iteration, and one slot per unrolled sweep
+    means EVERY sweep's outputs are loop state — interpret-mode XLA can
+    narrow neither the whole timed sweep down to the one element the
+    accumulator consumes (the repro.audit DCE finding,
+    ``tests/data/hlo/dce_pallas_copy.txt``) nor the interior unrolled sweeps
+    (the dead-interior-sweep finding,
+    ``tests/data/hlo/dead_sweep_xla_copy_u4.txt``).  On real TPU the opaque
+    pallas_call never had either hazard, and the slots only alias the output
+    buffers the kernel writes anyway.
     """
-    from repro.core.instruction_mix import _pass_loop
+    from repro.core.instruction_mix import (_consume_slots, _pass_loop,
+                                            _rotating_pass_loop)
     base_mix, _ = _split_mix(mix, depth)
     one = make_kernel(mix, depth=depth, block_rows=block_rows,
                       streams=streams, interpret=interpret,
@@ -89,21 +94,20 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
         eps = (acc * 1e-30).astype(x.dtype).reshape(())
         return x.at[(0,) * x.ndim].add(eps), acc
 
-    def _last(r):
-        val = r if getattr(r, "ndim", 0) == 0 else r.reshape(-1)[-1]
-        return val.astype(jnp.float32)
-
     def _perturb(t, acc):
         eps = (acc * 1e-30).astype(t.dtype).reshape(())
         return t.at[(0,) * t.ndim].add(eps)
 
     def _carried(call, x, extra):
-        """Pass loop with the kernel outputs in the while-loop carry."""
+        """Pass loop with the kernel outputs in rotating per-sweep carry
+        slots — every unrolled sweep's outputs stay live loop state (the
+        liveness mechanism; an ``optimization_barrier`` here demonstrably
+        does NOT survive XLA:CPU optimization)."""
         out0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             jax.eval_shape(call, x, *extra))
 
-        def body(_, carry):
-            x, extra, outs, acc = carry
+        def sweep(_, state, _outs):
+            x, extra, acc = state
             outs = call(x, *extra)
             for o in jax.tree.leaves(outs):
                 x, acc = _chain(x, o, acc)
@@ -111,17 +115,11 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
             # operand lets XLA hoist its arithmetic (e.g. triad's a*y scale)
             # out of the timed loop, halving the executed flops.
             extra = tuple(_perturb(e, acc) for e in extra)
-            # The barrier pins each unrolled sweep: without it, only the
-            # LAST sweep's outputs are live in the carry and interpret-mode
-            # XLA narrows every interior sweep to the one element the
-            # perturbation chain consumes (unroll>=2 would time ~1 sweep).
-            return jax.lax.optimization_barrier((x, extra, outs, acc))
+            return (x, extra, acc), outs
 
-        _, _, outs, acc = _pass_loop(body, passes, unroll,
-                                     (x, tuple(extra), out0, jnp.float32(0)))
-        for o in jax.tree.leaves(outs):    # consume: the carry must stay live
-            acc = acc + _last(o)
-        return acc
+        (_, _, acc), slots = _rotating_pass_loop(
+            sweep, passes, unroll, (x, tuple(extra), jnp.float32(0)), out0)
+        return _consume_slots(acc, slots)
 
     if base_mix == "triad":
         @jax.jit

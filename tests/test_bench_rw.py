@@ -162,7 +162,7 @@ def _xla_reference(name, x64, p):
     if name == "copy":
         return p * x64[0, 0] + x64[-1, -1]
     if name == "triad":
-        return p * 1.75 * x64[0, 0]
+        return p * 1.75 * x64[0, 0] + 1.75 * x64[-1, -1]
     if name == "mxu":
         return p * x64[0, 0]
     if m.fma_depth:

@@ -38,7 +38,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: bench,fig1,fig2,fig3,fig4,fig5,fig6,"
-                         "table1,collectives,roofline")
+                         "fig7,table1,collectives,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -79,6 +79,10 @@ def main() -> None:
               "(bandwidth- vs issue-bound)")
         from benchmarks import fig6_istream
         fig6_istream.main(quick=quick)
+    if want("fig7"):
+        print("\n## fig7: loaded-latency surface (bandwidth-latency curves)")
+        from benchmarks import fig7_loaded_latency
+        fig7_loaded_latency.main(quick=quick)
     if want("collectives"):
         print("\n## collectives: ICI-analogue link throughput (subprocess)")
         _subproc("benchmarks.collective_bench_main", quick)

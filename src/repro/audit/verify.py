@@ -61,6 +61,11 @@ ATOL_ELEMS_PER_SWEEP = 64.0
 # working-set read is considered eliminated, not merely mis-accounted
 DCE_FRACTION = 0.5
 
+# calibrated scalar bookkeeping of the chase walk's fori_loop, per chain
+# step (compare / counter increment / index arithmetic — measured identical
+# on xla and interpret-mode pallas, and unroll-invariant on xla)
+CHASE_LOOP_ARITH_PER_STEP = 5.0
+
 
 # --------------------------------------------------------------------------
 # expected compiled traffic
@@ -135,6 +140,18 @@ def expected_counts(mix: MixDef, backend: str, n: float,
       declared 2(R-1)n plus the per-output store-side add, duplicated).
     * ``mxu``: the weight panel (LANES^2 elements) streams per pass next
       to the declared n-element read; the product materializes (n stores).
+    * ``latency_chase``: the dependent-chain walk issues the declared
+      R loads per element (dependent loads are unhoistable — the walk
+      survives optimization intact on both backends) plus
+      ``CHASE_LOOP_ARITH_PER_STEP`` scalar bookkeeping arith per step.
+      The loaded composite adds ``load * GEN_SWEEPS_PER_PASS`` load_sum
+      generator sweeps per pass (their declared n loads + n arith each)
+      plus small calibrated scaffolding residuals that scale with the
+      buffer's row count (the per-sweep perturbation chain; see the chase
+      branch below and audit/README.md).  Pallas interpret mode
+      materializes the carried perm buffer at unrolled-sweep boundaries:
+      a (load+store) mirror of ``max(u-1, 2) * n`` elems per TRIP for
+      u > 1 (calibrated at u = 2, 4, 8).
     * pallas interpret mode emulates the kernel's explicit output buffers:
       R=1 write-bearing mixes double (copy / rw_1toW read AND write both
       the input image and the W outputs), multi-read mixes share the
@@ -160,6 +177,26 @@ def expected_counts(mix: MixDef, backend: str, n: float,
     u = max((knobs or {}).get("unroll") or 1, 1)
     R, W, f = mix.reads_per_elem, mix.writes_per_elem, mix.flops_per_elem
     name = mix.name
+    if mix.chase:
+        # Serial walk: R dependent loads per element + calibrated fori_loop
+        # bookkeeping.  Loaded composite: G*L generator sweeps (declared
+        # load_sum traffic) + residuals measured exactly at rows in
+        # {32, 64, 128}: L*(2*rows+16) loads, L*(2*rows+32) stores,
+        # L*(2*rows+80) arith (per-sweep perturbation-chain scaffolding;
+        # rows = n / LANES on the canonical audit shapes).
+        from repro.bench.mixes import GEN_SWEEPS_PER_PASS
+        load = (knobs or {}).get("load") or 0
+        rows = n / LANES
+        gl = load * GEN_SWEEPS_PER_PASS
+        loads = (R + gl) * n + load * (2 * rows + 16)
+        stores = load * (2 * rows + 32)
+        arith = (CHASE_LOOP_ARITH_PER_STEP + gl) * n + load * (2 * rows + 80)
+        if b == "pallas" and u > 1:
+            # interpret-mode carry materialization at sweep boundaries
+            mirror = max(u - 1, 2) * n / u
+            loads += mirror
+            stores += mirror
+        return {"loads": loads, "stores": stores, "arith": arith}
     if name.startswith("fma_"):
         return {"loads": (R + 1) * n, "stores": n, "arith": (f + 1) * n}
     if name == "load_sum":
@@ -214,6 +251,12 @@ def lint_mix(mix: MixDef) -> list[tuple[str, bool, str]]:
                                       mix.flops_per_elem) == (2.0, 1.0, 2.0),
                     f"triad declares (R,W,f)=({mix.reads_per_elem},"
                     f"{mix.writes_per_elem},{mix.flops_per_elem}) != (2,1,2)"))
+    if mix.chase:
+        out.append(("formula:chase", (mix.reads_per_elem, mix.writes_per_elem,
+                                      mix.flops_per_elem) == (1.0, 0.0, 0.0),
+                    f"chase declares (R,W,f)=({mix.reads_per_elem},"
+                    f"{mix.writes_per_elem},{mix.flops_per_elem}) != (1,0,0) "
+                    "(one dependent load per step, nothing else)"))
     return out
 
 
@@ -253,9 +296,12 @@ class CaseAudit:
         return [] if self.waived else [c for c in self.checks if not c.ok]
 
     def where(self) -> str:
-        """mix/backend/knob triple naming the case in violation output."""
+        """mix/backend/knob triple naming the case in violation output.
+        A knob at its no-op value is elided — 0 for the count-like ``load``
+        axis, 1 for the multiplier-like knobs (unroll/streams/interleave)."""
         knobs = ",".join(f"{k}={v}" for k, v in sorted(self.knobs.items())
-                         if v not in (None, 1))
+                         if v is not None
+                         and v != (0 if k == "load" else 1))
         return f"{self.backend}/{self.mix}" + (f"[{knobs}]" if knobs else "")
 
     def to_dict(self) -> dict:
@@ -346,7 +392,8 @@ def audit_case(spec: BenchSpec, mix_name: str, shape, dtype, passes: int,
         get_mix(mix_name), spec.backend, shape, str(prof.dtype), passes,
         prof.per_iter, prof.loop, prof.trips, unroll=spec.unroll,
         knobs={"streams": spec.streams, "block_rows": spec.block_rows,
-               "unroll": spec.unroll, "interleave": spec.interleave})
+               "unroll": spec.unroll, "interleave": spec.interleave,
+               "load": spec.load})
 
 
 def audit_hlo(hlo_text: str, mix_name: str, backend: str, shape,
@@ -445,17 +492,19 @@ def default_knob_grid(smoke: bool = False) -> list[dict]:
     for no additional formula coverage — each knob's traffic effect is
     independent by construction).  Smoke keeps the base case plus the
     unroll axis at {2, 4} — the CI fast-fail gate that pins the
-    rotating-carry fix (carried-mix unroll is enforced, not waived)."""
+    rotating-carry fix (carried-mix unroll is enforced, not waived) — plus
+    the loaded-latency composite at load=1 (chase mixes only; the guard in
+    ``audit_registry`` skips the load knob for everything else)."""
     if smoke:
-        return [{}, {"unroll": 2}, {"unroll": 4}]
+        return [{}, {"unroll": 2}, {"unroll": 4}, {"load": 1}]
     # streams rides with a small block so the pallas tiling yields enough
     # blocks to split on the compact audit shape; block_rows=32 makes the
     # tiling axis non-trivial (2+ blocks) on the default 64-row shape
     return [{}, {"streams": 2, "block_rows": 16}, {"unroll": 2},
-            {"interleave": 2}, {"block_rows": 32}]
+            {"interleave": 2}, {"block_rows": 32}, {"load": 1}]
 
 
-SMOKE_MIXES = ("copy", "triad", "rw_2to1")
+SMOKE_MIXES = ("copy", "triad", "rw_2to1", "latency_chase")
 
 
 def audit_registry(backends=("xla", "pallas"), mixes=None, shape=(64, 128),
@@ -489,6 +538,10 @@ def audit_registry(backends=("xla", "pallas"), mixes=None, shape=(64, 128),
                 continue
             for knobs in knob_grid:
                 if knobs.get("interleave", 1) > 1 and not interleavable(mix):
+                    continue
+                # the load axis only exists on chase mixes (the spec gates
+                # it); skip silently rather than emit a skipped row per mix
+                if (knobs.get("load") or 0) > 0 and not mix.chase:
                     continue
                 case_id = f"{backend}/{name}" + \
                     (f"[{','.join(f'{k}={v}' for k, v in sorted(knobs.items()))}]"
@@ -527,10 +580,12 @@ def audit_registry(backends=("xla", "pallas"), mixes=None, shape=(64, 128),
 # golden fixtures (deviceless CI path)
 # --------------------------------------------------------------------------
 
-# (mix, backends, unroll): the unroll>1 rows pin the rotating-carry
-# lowering for every carried-mix family head — regenerating them after a
-# kernel edit that reintroduces dead interior sweeps flips the deviceless
-# audit red with no device in the loop.
+# (mix, backends, unroll[, knobs]): the unroll>1 rows pin the
+# rotating-carry lowering for every carried-mix family head — regenerating
+# them after a kernel edit that reintroduces dead interior sweeps flips the
+# deviceless audit red with no device in the loop.  The chase rows pin the
+# latency probe's dependent-load walk (unloaded) and the loaded composite
+# (the optional trailing knobs dict, e.g. {"load": 1}).
 GOLDEN_SET = (("load_sum", ("xla", "pallas"), 1),
               ("copy", ("xla", "pallas"), 1),
               ("triad", ("xla", "pallas"), 1),
@@ -541,7 +596,9 @@ GOLDEN_SET = (("load_sum", ("xla", "pallas"), 1),
               ("rw_2to1", ("xla", "pallas"), 2),
               ("copy", ("xla", "pallas"), 4),
               ("triad", ("xla", "pallas"), 4),
-              ("rw_2to1", ("xla", "pallas"), 4))
+              ("rw_2to1", ("xla", "pallas"), 4),
+              ("latency_chase", ("xla", "pallas"), 1),
+              ("latency_chase", ("xla", "pallas"), 1, {"load": 1}))
 
 
 def _golden_passes(passes: int, unroll: int) -> int:
@@ -564,21 +621,27 @@ def write_goldens(out_dir, shape=(64, 128), dtype: str = "float32",
     nbytes = n * np.dtype(dtype).itemsize
     manifest = {"shape": list(shape), "dtype": dtype, "passes": passes,
                 "unroll": 1, "cases": []}
-    for name, backends, unroll in GOLDEN_SET:
+    for entry in GOLDEN_SET:
+        name, backends, unroll = entry[:3]
+        extra = dict(entry[3]) if len(entry) > 3 else {}
         p = _golden_passes(passes, unroll)
         for backend in backends:
             spec = BenchSpec(mixes=(name,), sizes=(nbytes,), backend=backend,
                              dtype=dtype, passes=p, reps=2, warmup=0,
-                             unroll=unroll)
+                             unroll=unroll, **extra)
             hlo = lower_case(spec, name, shape, dtype, p)
             fname = f"{backend}__{name}__{'x'.join(map(str, shape))}" \
                     f"__{dtype}__p{p}" \
-                    f"{f'__u{unroll}' if unroll > 1 else ''}.txt"
+                    f"{f'__u{unroll}' if unroll > 1 else ''}" \
+                    f"{''.join(f'__{k}{v}' for k, v in sorted(extra.items()))}" \
+                    ".txt"
             (out_dir / fname).write_text(hlo)
             case = {"file": fname, "mix": name, "backend": backend}
             if unroll > 1:
                 case["unroll"] = unroll
                 case["passes"] = p
+            if extra:
+                case["knobs"] = extra
             manifest["cases"].append(case)
     (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
     return manifest
@@ -596,10 +659,13 @@ def audit_goldens(golden_dir) -> AuditReport:
     for case in manifest["cases"]:
         hlo = (golden_dir / case["file"]).read_text()
         unroll = case.get("unroll", manifest.get("unroll", 1))
+        knobs = dict(case.get("knobs") or {})
+        if unroll > 1:
+            knobs["unroll"] = unroll
         report.cases.append(audit_hlo(
             hlo, case["mix"], case["backend"], shape,
             dtype=manifest["dtype"],
             passes=case.get("passes", manifest["passes"]),
             unroll=unroll,
-            knobs={"unroll": unroll} if unroll > 1 else None))
+            knobs=knobs or None))
     return report

@@ -114,6 +114,9 @@ class _CaseBackend:
         lowers cached cases without materializing working sets)."""
         import jax
         sds = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        if mix.chase:
+            perm = jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+            return (perm, sds) if spec.load else (perm,)
         return (sds,) * _mix_arity(mix)
 
     def bind_case(self, case: Callable, spec: BenchSpec, mix: MixDef, x
@@ -164,8 +167,12 @@ def _validate_oracle_knobs(spec: BenchSpec, backend_name: str) -> None:
             + _gate(backend_name, "interleave xor streams/block_rows"))
 
 
-def _mix_arity(mix: MixDef) -> int:
-    """Positional buffer count of a mix's oracle case (reads then writes)."""
+def _mix_arity(mix: MixDef, load: int = 0) -> int:
+    """Positional buffer count of a mix's oracle case (reads then writes).
+    A chase probe takes its permutation buffer, plus the generator working
+    set when ``load`` generators are composed in."""
+    if mix.chase:
+        return 2 if load else 1
     if mix.name == "triad":
         return 3
     if mix.rw is not None:
@@ -173,12 +180,18 @@ def _mix_arity(mix: MixDef) -> int:
     return 1
 
 
-def _mix_operands(mix: MixDef, x, place=lambda a: a) -> tuple:
+def _mix_operands(mix: MixDef, x, place=lambda a: a, load: int = 0,
+                  parts: int = 1) -> tuple:
     """Every buffer a mix's oracle case consumes, in positional order, built
     OUTSIDE the timed call.  ``x`` passes through as-is (the Runner already
     placed it via prepare_buffer); companion streams — triad's (a, c), the rw
-    family's extra read and write streams — go through ``place`` (identity on
-    xla, a mesh device_put on sharded)."""
+    family's extra read and write streams, the chase probe's permutation
+    buffer (``parts`` local cycles: one per mesh shard) — go through
+    ``place`` (identity on xla, a mesh device_put on sharded)."""
+    if mix.chase:
+        from repro.core.instruction_mix import chase_perm
+        perm = place(jnp.asarray(chase_perm(x.shape, parts)))
+        return (perm, x) if load else (perm,)
     if mix.name == "triad":
         return (place(jnp.zeros_like(x)), x, place(x * 0.5))
     if mix.rw is not None:
@@ -223,6 +236,15 @@ def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
                 + ("" if backend_name == "xla" else
                    f" (the per-device shard on {backend_name})"))
         return lambda x: im.k_blocked_sum(x, brows, passes, unroll)
+    if mix.chase:
+        load = spec.load
+        if load:
+            # the single-device composite: probe + generators time-shared in
+            # one timed computation (the mesh backends build their own
+            # probe-on-shard-0 composite in make_case instead)
+            return lambda perm, gen: im.k_chase_loaded(perm, gen, passes,
+                                                       unroll, load=load)
+        return lambda perm: im.k_chase(perm, passes, unroll)
     if mix.name == "triad":
         return lambda a, b, c: im.k_triad(a, b, c, passes, unroll)
     if mix.rw is not None:
@@ -237,10 +259,11 @@ def _oracle_case(spec: BenchSpec, mix: MixDef, rows: int, passes: int,
                                 interleave=interleave)
 
 
-def _bind_oracle_case(case: Callable, mix: MixDef, x) -> Callable[[], object]:
+def _bind_oracle_case(case: Callable, mix: MixDef, x, load: int = 0
+                      ) -> Callable[[], object]:
     """Close an oracle case over its buffers; companion streams are built
     here, outside the timed call (shared by xla and sharded)."""
-    bufs = _mix_operands(mix, x)
+    bufs = _mix_operands(mix, x, load=load)
     return lambda: case(*bufs)
 
 
@@ -258,7 +281,7 @@ class XLABackend(_CaseBackend):
         return _oracle_case(spec, mix, shape[0], passes, self.name)
 
     def bind_case(self, case, spec, mix, x):
-        return _bind_oracle_case(case, mix, x)
+        return _bind_oracle_case(case, mix, x, load=spec.load)
 
 
 class _MeshOracleBackend(_CaseBackend):
@@ -305,6 +328,13 @@ class _MeshOracleBackend(_CaseBackend):
 
     def validate(self, spec: BenchSpec) -> None:
         _validate_oracle_knobs(spec, self.name)
+        if spec.load and spec.devices != spec.load + 1:
+            raise BenchSpecError(
+                f"{self.name} backend places the latency probe on shard 0 "
+                f"and each of the {spec.load} generator(s) on its own "
+                f"sibling shard: need devices == load + 1 "
+                f"({spec.load + 1}), got devices={spec.devices}"
+                + _gate(self.name, "devices == load + 1"))
         self._mesh(spec.devices)        # device-count check
 
     def make_case(self, spec, mix, shape, dtype, passes):
@@ -316,11 +346,35 @@ class _MeshOracleBackend(_CaseBackend):
             raise BenchSpecError(
                 f"devices={k} does not divide the {rows}-row working set")
         mesh = self._mesh(k)
-        shard = _oracle_case(spec, mix, rows // k, passes, self.name)
-        n_args = _mix_arity(mix)    # triad: (a, b, c); rw_RtoW: R+W streams
+        n_args = _mix_arity(mix, spec.load)   # triad: (a,b,c); rw: R+W
 
-        def body(*vs):                   # each v: (1, rows // k, lanes)
-            return shard(*(v[0] for v in vs)).reshape(1)
+        if mix.chase and spec.load:
+            # the mesh composite: ONE timed computation in which shard 0
+            # walks its pointer cycle (the probe) while every sibling shard
+            # runs load_sum sweeps over its slice of the generator buffer
+            # (the bandwidth generators) — real spatial co-scheduling, not
+            # the single-device time-shared emulation
+            from repro.bench.mixes import GEN_SWEEPS_PER_PASS
+            from repro.core import instruction_mix as im
+            if passes % spec.unroll:
+                raise BenchSpecError(
+                    f"passes={passes} is not a multiple of "
+                    f"unroll={spec.unroll}"
+                    + _gate(self.name, "passes % unroll == 0"))
+            gen_passes = passes * GEN_SWEEPS_PER_PASS
+            unroll = spec.unroll
+
+            def body(perm_v, gen_v):     # each v: (1, rows // k, lanes)
+                out = jax.lax.cond(
+                    jax.lax.axis_index("d") == 0,
+                    lambda: im.k_chase(perm_v[0], passes, unroll),
+                    lambda: im.k_load_sum(gen_v[0], gen_passes))
+                return out.reshape(1)
+        else:
+            shard = _oracle_case(spec, mix, rows // k, passes, self.name)
+
+            def body(*vs):               # each v: (1, rows // k, lanes)
+                return shard(*(v[0] for v in vs)).reshape(1)
 
         smap = jax.shard_map(body, mesh=mesh,
                              in_specs=(P("d", None, None),) * n_args,
@@ -349,7 +403,8 @@ class _MeshOracleBackend(_CaseBackend):
         # prepare_buffer already spread across the mesh)
         sharding = self._sharding(spec.devices)
         bufs = _mix_operands(mix, x,
-                             place=lambda a: self._place(a, sharding))
+                             place=lambda a: self._place(a, sharding),
+                             load=spec.load, parts=spec.devices)
         return lambda: case(*bufs)
 
 
@@ -501,11 +556,14 @@ class PallasBackend(_CaseBackend):
         return mb_ops.make_timed_kernel(
             mix.name, depth=mix.fma_depth or 8, block_rows=rows,
             streams=spec.streams, interpret=spec.interpret, passes=passes,
-            unroll=spec.unroll, interleave=spec.interleave)
+            unroll=spec.unroll, interleave=spec.interleave, load=spec.load)
 
     def abstract_args(self, spec, mix, shape, dtype):
         import jax
         sds = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        if mix.chase:
+            perm = jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+            return (perm, sds) if spec.load else (perm,)
         if mix.name == "triad":
             return (sds, sds)           # fn(x, y)
         if mix.rw is not None:
@@ -513,6 +571,15 @@ class PallasBackend(_CaseBackend):
         return (sds,)
 
     def bind_case(self, case, spec, mix, x):
+        if mix.chase:
+            # one pointer cycle per VMEM tile: the grid walks the tiles, the
+            # kernel chases the current tile's TILE-LOCAL cycle
+            from repro.core.instruction_mix import chase_perm
+            rows = self._resolve(spec, x.shape[0])
+            perm = jnp.asarray(chase_perm(x.shape, x.shape[0] // rows))
+            if spec.load:
+                return lambda: case(perm, x)
+            return lambda: case(perm)
         if mix.name == "triad":
             y = x * 0.5
             return lambda: case(x, y)

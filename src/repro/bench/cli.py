@@ -15,6 +15,9 @@ launch.
     audit       static accounting verifier: declared bytes/flops vs compiled
                 IR for every mix x backend x knob combination, no timing;
                 exit 0 clean, 2 on violation (repro.audit)
+    latency     loaded-latency surface: the latency_chase probe across the
+                load axis -> bandwidth-latency curve + per-level knee fit
+                (characterize.loaded); --smoke is the CI fast-fail gate
     launch      spawn N coordinated local processes running ``run --backend
                 distributed`` with forced host devices — the single-machine
                 simulation of a multi-host Fig-4 scaling study
@@ -64,6 +67,8 @@ def _spec_from_args(args) -> BenchSpec:
         kw["unroll"] = args.unroll
     if args.interleave is not None:
         kw["interleave"] = args.interleave
+    if getattr(args, "load", None) is not None:
+        kw["load"] = args.load
     if args.quick:
         return quick_spec(backend=args.backend, **kw)
     return BenchSpec(backend=args.backend, **kw)
@@ -89,6 +94,9 @@ def _add_spec_flags(p: argparse.ArgumentParser):
                    help="per-pass unroll factor (istream knob)")
     p.add_argument("--interleave", type=int, default=None,
                    help="independent dependence chains (istream knob)")
+    p.add_argument("--load", type=int, default=None,
+                   help="co-scheduled bandwidth generators next to the "
+                        "latency probe (latency_chase only; 0 = idle)")
 
 
 def _add_grid_flags(p: argparse.ArgumentParser):
@@ -338,6 +346,63 @@ def cmd_audit(args) -> int:
     return report.exit_code()
 
 
+def cmd_latency(args) -> int:
+    """Loaded-latency surface (see characterize.loaded): sweep the
+    ``latency_chase`` probe across the ``load`` axis at each working-set
+    size, fit the per-level bandwidth–latency knee, print the curve, save
+    the schema-v5 result.  ``--smoke`` is the CI fast-fail preset: one
+    small size, loads (0, 1, 2), plus an inline accounting audit of the
+    chase on BOTH backends (idle and loaded) that must come back checked
+    — never waived — and clean (exit 2 otherwise)."""
+    from repro.characterize.loaded import fit_loaded, loaded_latency_sweep
+
+    sizes = _parse_sizes(args.sizes) if args.sizes else \
+        ((128 * 2**10,) if args.smoke else (128 * 2**10, 16 * 2**20))
+    loads = tuple(int(tok) for tok in args.loads.split(",")) if args.loads \
+        else ((0, 1, 2) if args.smoke else (0, 1, 2, 4))
+    reps = args.reps if args.reps is not None else (3 if args.smoke else 5)
+    res = loaded_latency_sweep(sizes, loads, backend=args.backend,
+                               runner=Runner(), reps=reps)
+    fit = fit_loaded(res)
+    if fit:
+        res.meta["loaded_latency"]["fit"] = fit
+
+    print(f"{'nbytes':>12s} {'load':>4s} {'latency ns':>10s} {'gen GB/s':>9s}")
+    for p in res.points:
+        print(f"{p.nbytes:12d} {p.load:4d} {p.latency_ns:10.2f} "
+              f"{p.gen_gbps:9.2f}")
+    for name, knee in ((fit or {}).get("levels") or {}).items():
+        print(f"# {name}: idle {knee['idle_latency_ns']:.1f} ns, knee at "
+              f"load={knee['knee_load']} ({knee['knee_gen_gbps']:.2f} GB/s "
+              f"generated), max {knee['max_latency_ns']:.1f} ns")
+
+    rc = 0
+    if args.smoke:
+        from repro.audit import audit_case
+        shape = (64, 128)
+        nbytes = shape[0] * shape[1] * 4
+        audits = []
+        for backend in ("xla", "pallas"):
+            for load in (0, 1):
+                spec = BenchSpec(mixes=("latency_chase",), sizes=(nbytes,),
+                                 backend=backend, passes=4, reps=2, warmup=0,
+                                 load=load)
+                a = audit_case(spec, "latency_chase", shape, "float32", 4)
+                audits.append(a)
+                print(f"# audit {a.where()}: "
+                      f"{'waived' if a.waived else 'ok' if a.ok else 'FAIL'}")
+        res.meta["audit"] = [a.to_dict() for a in audits]
+        if any(a.waived or not a.ok for a in audits):
+            print("error: latency_chase accounting must be checked clean on "
+                  "both backends (got a waiver or violation)", file=sys.stderr)
+            rc = 2
+    if args.out:
+        res.to_json(args.out)
+        print(f"# saved {len(res.points)} points "
+              f"(schema v{res.schema_version}) -> {args.out}")
+    return rc
+
+
 def cmd_launch(args) -> int:
     """Spawn N coordinated local processes running ``run`` with the same
     spec flags (see bench.distributed.launch_local).  All children share one
@@ -460,6 +525,29 @@ def main(argv=None) -> int:
     p_aud.add_argument("--out", default=None,
                        help="write the audit report JSON here")
     p_aud.set_defaults(fn=cmd_audit)
+
+    p_lat = sub.add_parser(
+        "latency",
+        help="loaded-latency surface: latency_chase across the load axis "
+             "(Mess-style bandwidth-latency curves; see characterize.loaded)",
+        allow_abbrev=False)
+    p_lat.add_argument("--smoke", action="store_true",
+                       help="CI fast-fail: one small size, loads 0,1,2, plus "
+                            "an inline both-backend chase accounting audit")
+    p_lat.add_argument("--backend", default="xla",
+                       help="xla | pallas (single-device time-shared "
+                            "composite; sharded sweeps need explicit "
+                            "--devices per load, use `run`)")
+    p_lat.add_argument("--sizes", default=None,
+                       help="comma list, K/M/G ok (default: 128K smoke, "
+                            "128K,16M full)")
+    p_lat.add_argument("--loads", default=None,
+                       help="comma list of generator counts "
+                            "(default: 0,1,2 smoke, 0,1,2,4 full)")
+    p_lat.add_argument("--reps", type=int, default=None)
+    p_lat.add_argument("--out", default=None,
+                       help="write the schema-v5 result JSON here")
+    p_lat.set_defaults(fn=cmd_latency)
 
     p_launch = sub.add_parser(
         "launch", help="N coordinated local processes (multi-host simulation)",

@@ -16,8 +16,10 @@ and unbounded ``summarize`` bands serialize as ``null`` instead of the
 non-JSON ``Infinity``; 4 = points carry the instruction-stream knobs
 (``unroll`` / ``interleave``) and an optional ``istream`` dict — the
 per-point compiled-IR instruction profile + bandwidth-vs-issue-bound label
-attached by ``repro.istream``.  Older files load unchanged with the
-defaults.
+attached by ``repro.istream``; 5 = points carry the loaded-latency axes
+(``load`` generator count, per-step ``latency_ns``, aggregate generator
+``gen_gbps`` — the Mess-style bandwidth–latency curve coordinates; None /
+0 on non-chase points).  Older files load unchanged with the defaults.
 """
 from __future__ import annotations
 
@@ -27,7 +29,7 @@ import platform
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 
 def level_band(level_size: int | None,
@@ -66,6 +68,11 @@ class BenchPoint:
     interleave: int = 1
     istream: dict | None = None     # schema v4: repro.istream attaches the
     #   compiled-IR profile + bound classification here (None = not analyzed)
+    load: int = 0               # schema v5: co-scheduled bandwidth generators
+    latency_ns: float | None = None     # schema v5: ns per dependent chase
+    #   step (chase mixes only; the loaded-latency curve's y axis)
+    gen_gbps: float | None = None       # schema v5: aggregate generator GB/s
+    #   (chase mixes: 0.0 at load=0; the loaded-latency curve's x axis)
 
 
 @dataclass
@@ -138,11 +145,18 @@ class BenchResult:
 
         ``key`` overrides the per-point grouping column (default: the mix
         name) — e.g. ``lambda p: f"{p.mix}/u{p.unroll}x{p.interleave}"``
-        groups a knob sweep by the instruction-stream axes.  Prefer string
-        keys if the summary is stashed into ``meta`` (JSON object keys).
+        groups a knob sweep by the instruction-stream axes.  A plain string
+        names a BenchPoint field to group by (``summarize(key="load")``
+        groups a loaded-latency sweep by generator count); field values are
+        rendered with ``str()`` so the summary survives a ``meta`` JSON
+        round-trip (JSON object keys are strings).  Prefer string keys if
+        the summary is stashed into ``meta``.
         """
         if levels is None:
             levels = (("all", None),)
+        if isinstance(key, str):
+            col = key
+            key = lambda p: str(getattr(p, col))  # noqa: E731
         key = key or (lambda p: p.mix)
         out: dict[str, dict] = {}
         prev = min_band_bytes / 2.0

@@ -24,9 +24,49 @@ from repro.bench.result import BenchPoint, BenchResult, machine_meta
 from repro.bench.spec import BenchSpec, BenchSpecError
 
 
-def pick_passes(nbytes: int, target_bytes: float = 2e8) -> int:
-    """Enough passes that one timed call moves ~target_bytes (>= ms-scale)."""
+#: serial dependent-load steps per timed call for chase mixes — the latency
+#: analogue of ``target_bytes``.  A pointer chase is ~2 orders of magnitude
+#: slower per byte than a bandwidth sweep (each load waits out the full
+#: access latency), so sizing its passes by target_bytes over-provisions the
+#: wall time of a timed call by the same factor; size by total chain steps
+#: instead.
+CHASE_TARGET_STEPS = 2 ** 17
+
+
+def pick_passes(nbytes: int, target_bytes: float = 2e8, mix=None,
+                n_elems: int | None = None, devices: int = 1) -> int:
+    """Enough passes that one timed call moves ~target_bytes (>= ms-scale).
+
+    Chase mixes are sized per-mix instead: enough passes that one call walks
+    ~``CHASE_TARGET_STEPS`` dependent steps (per probe shard — on a mesh the
+    probe walks its ``1/devices`` slice), because a dependent chain's wall
+    time scales with steps x latency, not bytes / bandwidth."""
+    if mix is not None and getattr(mix, "chase", False):
+        steps = max(1, (n_elems if n_elems else nbytes // 4)
+                    // max(devices, 1))
+        return max(1, CHASE_TARGET_STEPS // steps)
     return max(1, int(target_bytes / max(nbytes, 1)))
+
+
+def _chase_accounting(mix, spec: BenchSpec, real_bytes: int, n_elems: int,
+                      passes: int) -> tuple[float, float]:
+    """Bytes/flops per timed call for a chase (latency-probe) case.
+
+    Probe traffic: idle (load=0) every shard walks its own cycle, touching
+    the whole buffer per pass; in a loaded composite only shard 0 walks its
+    ``1/devices`` slice (devices=1 on the single-device backends).
+    Generator traffic: each of the ``load`` generators performs
+    ``GEN_SWEEPS_PER_PASS`` load_sum sweeps of its ``1/devices`` slice per
+    probe pass — the same formula both backends' composite kernels execute,
+    so the bytes_per_call a chase point reports is total composite traffic
+    (probe + generators).  Flops: the probe does none; each generator
+    element costs one load_sum add."""
+    from repro.bench.mixes import GEN_SWEEPS_PER_PASS
+    k = max(spec.devices, 1)
+    probe_bytes = mix.bytes_per_pass(real_bytes) / (k if spec.load else 1)
+    gen_elems = spec.load * GEN_SWEEPS_PER_PASS * (n_elems / k)
+    gen_bytes = gen_elems * (real_bytes / n_elems)
+    return (probe_bytes + gen_bytes) * passes, gen_elems * passes
 
 
 class Runner:
@@ -71,18 +111,26 @@ class Runner:
             shape = buffers.working_set_shape(nbytes, dtype=dtype)
             n_elems = shape[0] * shape[1]
             real_bytes = n_elems * dtype.itemsize
-            passes = spec.passes or pick_passes(real_bytes, spec.target_bytes)
-            if passes % spec.unroll:
-                # auto-picked passes round UP to whole unrolled loop bodies
-                # (explicit spec.passes is validated to divide already)
-                passes += spec.unroll - passes % spec.unroll
             group = []
             for name in spec.mixes:
                 mix = get_mix(name)
+                # per-MIX pass picking: a chase mix is sized by chain steps,
+                # a bandwidth mix by bytes (same answer for uniform specs)
+                passes = spec.passes or pick_passes(
+                    real_bytes, spec.target_bytes, mix=mix,
+                    n_elems=n_elems, devices=spec.devices)
+                if passes % spec.unroll:
+                    # auto-picked passes round UP to whole unrolled loop
+                    # bodies (explicit spec.passes is validated to divide)
+                    passes += spec.unroll - passes % spec.unroll
                 case = (self._case(backend, spec, mix, shape, dtype, passes)
                         if cacheable else None)
-                bpc = mix.bytes_per_pass(real_bytes) * passes
-                fpc = mix.flops_per_pass(n_elems) * passes
+                if mix.chase:
+                    bpc, fpc = _chase_accounting(mix, spec, real_bytes,
+                                                 n_elems, passes)
+                else:
+                    bpc = mix.bytes_per_pass(real_bytes) * passes
+                    fpc = mix.flops_per_pass(n_elems) * passes
                 group.append((mix, passes, case, bpc, fpc))
             plan.append((real_bytes, shape, group))
 
@@ -105,6 +153,18 @@ class Runner:
                 t = timing.time_fn(fn, reps=spec.reps, warmup=spec.warmup,
                                    bytes_per_call=bpc, flops_per_call=fpc)
                 del fn      # drop companion buffers with the case binding
+                latency_ns = gen_gbps = None
+                if mix.chase:
+                    # the Mess-curve coordinates: ns per dependent step of
+                    # the probe shard's walk, and aggregate generator GB/s
+                    from repro.bench.mixes import GEN_SWEEPS_PER_PASS
+                    k = max(spec.devices, 1)
+                    n_elems = shape[0] * shape[1]
+                    steps = passes * max(n_elems // k, 1)
+                    latency_ns = t.mean_s * 1e9 / steps
+                    gen_bytes = (spec.load * GEN_SWEEPS_PER_PASS
+                                 * real_bytes / k) * passes
+                    gen_gbps = gen_bytes / t.mean_s / 1e9
                 res.points.append(BenchPoint(
                     nbytes=real_bytes, nbytes_requested=nbytes,
                     mix=mix.name, dtype=spec.dtype,
@@ -113,7 +173,9 @@ class Runner:
                     bytes_per_call=bpc, flops_per_call=fpc,
                     mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
                     gbps=t.gbps, gflops=t.gflops, devices=spec.devices,
-                    unroll=spec.unroll, interleave=spec.interleave))
+                    unroll=spec.unroll, interleave=spec.interleave,
+                    load=spec.load, latency_ns=latency_ns,
+                    gen_gbps=gen_gbps))
             del x           # release this size before building the next
         return res
 

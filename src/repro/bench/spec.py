@@ -21,6 +21,12 @@ the Runner executes on any registered backend.  Knob -> paper mapping:
                  is split into ``interleave`` row chunks, each with its own
                  accumulator, combined only after the sweep (shortens the
                  dependence critical path without changing bytes/flops)
+    load         Mess-style loaded latency: number of bandwidth-generator
+                 streams co-scheduled with a ``latency_chase`` probe in ONE
+                 timed composite (0 = idle probe).  Requires every mix in
+                 the spec to be a chase mix; on the mesh backends the probe
+                 runs on shard 0 and each generator on its own sibling
+                 shard, so ``devices`` must equal ``load + 1``
     reps/warmup/passes   the serialized-timing repetition discipline (§4/§5)
 
 ``unroll`` and ``interleave`` feed ``repro.istream``: they vary issue
@@ -29,7 +35,9 @@ classifier can separate bandwidth-bound from issue-bound points.
 
 spec_version history: 1 = original knob set; 2 = adds ``devices`` (older
 files load with the single-device default); 3 = adds ``unroll`` /
-``interleave`` (the instruction-stream knobs; older files load with 1/1).
+``interleave`` (the instruction-stream knobs; older files load with 1/1);
+4 = adds ``load`` (co-scheduled bandwidth generators for loaded-latency
+composites; older files load with the idle default 0).
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ from pathlib import Path
 
 from repro.bench import mixes as mixreg
 
-SPEC_VERSION = 3
+SPEC_VERSION = 4
 
 
 class BenchSpecError(ValueError):
@@ -65,6 +73,7 @@ class BenchSpec:
     devices: int = 1                  # mesh devices (multi-device backends)
     unroll: int = 1                   # sweeps per measurement-loop trip
     interleave: int = 1               # independent dependence chains / sweep
+    load: int = 0                     # co-scheduled bandwidth generators
     passes: int | None = None         # None = auto from target_bytes
     target_bytes: float = 2e8         # auto pass-picking: bytes per timed call
     reps: int = 10
@@ -100,6 +109,11 @@ class BenchSpec:
                 raise BenchSpecError(
                     f"mix {m!r} is not supported by backend "
                     f"{self.backend!r} (declared: {mix.backends})")
+            if self.load > 0 and not mix.chase:
+                raise BenchSpecError(
+                    f"load={self.load} co-schedules bandwidth generators "
+                    f"around a latency probe, so every mix must be a chase "
+                    f"mix (e.g. 'latency_chase'); got {m!r}")
         if not self.sizes or any(int(s) <= 0 for s in self.sizes):
             raise BenchSpecError(f"sizes must be positive ints: {self.sizes}")
         if self.streams < 1:
@@ -121,6 +135,8 @@ class BenchSpec:
         if self.interleave < 1:
             raise BenchSpecError(
                 f"interleave must be >= 1: {self.interleave}")
+        if self.load < 0:
+            raise BenchSpecError(f"load must be >= 0: {self.load}")
         if self.passes is not None and self.passes < 1:
             raise BenchSpecError(f"passes must be >= 1: {self.passes}")
         if self.passes is not None and self.passes % self.unroll:

@@ -14,6 +14,8 @@ Layers (measurement -> inference):
   (the paper's fine spatial granularity at a fraction of a dense grid)
 * ``detect``    — change-point/plateau detection: levels, capacities and
   bandwidths *with confidence intervals*, no sysfs/documentation input
+* ``loaded``    — loaded-latency (Mess-style bandwidth–latency) sweeps over
+  the ``latency_chase`` mix's ``load`` axis + per-level knee fits
 * ``fit``       — schema-versioned ``FittedMachineModel``; registers into
   the ``core.machine_model`` spec registry; consumed by ``roofline.analyze``
   and ``core.autotune``; ``compare_to`` reproduces the Table-1 deltas
@@ -29,6 +31,8 @@ from repro.characterize.fit import (FITTED_SCHEMA_VERSION,  # noqa: F401
                                     FittedMachineModel, LevelFit,
                                     characterize, crosscheck_prior,
                                     fit_from_result, probe_sizes)
+from repro.characterize.loaded import (fit_knee, fit_loaded,  # noqa: F401
+                                       loaded_latency_sweep)
 from repro.characterize.report import (render_json,  # noqa: F401
                                        render_markdown, write_report)
 
@@ -38,5 +42,6 @@ __all__ = [
     "detect_levels",
     "FITTED_SCHEMA_VERSION", "FittedMachineModel", "LevelFit",
     "characterize", "crosscheck_prior", "fit_from_result", "probe_sizes",
+    "fit_knee", "fit_loaded", "loaded_latency_sweep",
     "render_json", "render_markdown", "write_report",
 ]

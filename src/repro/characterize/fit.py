@@ -32,9 +32,11 @@ from repro.core.machine_model import (HardwareSpec, MachineModel, MemLevel,
 
 # schema history: 1 = levels/penalties/ridge/prior/provenance; 2 = optional
 # ``issue`` dict — the fitted instruction-issue model (``rate_elems_per_s``
-# + fit provenance) that ``repro.istream`` classifies against.  v1 files
-# load unchanged (issue stays None).
-FITTED_SCHEMA_VERSION = 2
+# + fit provenance) that ``repro.istream`` classifies against; 3 = optional
+# ``loaded_latency`` dict — per-level bandwidth–latency knee fits from a
+# loaded-latency sweep (``characterize.loaded.fit_loaded``).  Older files
+# load unchanged (the optional fields stay None).
+FITTED_SCHEMA_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -70,6 +72,10 @@ class FittedMachineModel:
     issue: Optional[dict] = None    # schema v2: fitted issue model —
     #   {"rate_elems_per_s": float, ...fit provenance}; repro.istream both
     #   fits it (fit_issue_rate) and classifies against it
+    loaded_latency: Optional[dict] = None   # schema v3: per-level
+    #   bandwidth–latency knee fits — {"factor", "levels": {name:
+    #   {"idle_latency_ns", "knee_load", "knee_gen_gbps", ...curve}}}
+    #   from characterize.loaded.fit_loaded over a latency_chase sweep
     schema_version: int = FITTED_SCHEMA_VERSION
 
     def __post_init__(self):
@@ -209,6 +215,7 @@ class FittedMachineModel:
             "sysfs_prior": self.sysfs_prior,
             "provenance": self.provenance,
             "issue": self.issue,
+            "loaded_latency": self.loaded_latency,
         }
 
     def to_json(self, path: str | Path | None = None) -> str:

@@ -26,12 +26,14 @@ which XLA-level code cannot express without the load being dead-code).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.bench.mixes import FMA_DEPTHS, RW_COMBINE_COEF, MixDef
+from repro.bench.mixes import (FMA_DEPTHS, GEN_SWEEPS_PER_PASS,
+                               RW_COMBINE_COEF, MixDef)
 
 # legacy alias — the registry's MixDef is attribute-compatible with the old Mix
 Mix = MixDef
@@ -44,7 +46,8 @@ def mixes(fma_depths=FMA_DEPTHS) -> dict[str, Mix]:
     from repro.bench.mixes import get_mix, registry
     out = {name: m for name, m in registry().items()
            if m.supports("xla") and not name.startswith("fma_")
-           and m.rw is None}     # parameterized families stay bench-only
+           and m.rw is None      # parameterized families stay bench-only
+           and not m.chase}      # the latency probe is bench-only too
     for k in fma_depths:
         out[f"fma_{k}"] = get_mix(f"fma_{k}")
     return out
@@ -360,6 +363,94 @@ def k_triad(a, b, c, passes: int, unroll: int = 1):
     return _consume_slots(acc, slots)
 
 
+@lru_cache(maxsize=64)
+def _chase_perm_np(rows: int, lanes: int, parts: int):
+    if parts < 1 or rows % parts:
+        raise ValueError(
+            f"chase_perm: parts={parts} must divide rows={rows} (each part "
+            f"is a row-contiguous segment with its own pointer cycle)")
+    n = rows * lanes
+    m = n // parts
+    rng = np.random.default_rng(0)          # deterministic walk order
+    out = np.empty(n, dtype=np.int32)
+    for s in range(parts):
+        order = rng.permutation(m)
+        seg = np.empty(m, dtype=np.int32)
+        seg[order] = np.roll(order, -1)     # order[i] -> order[i+1]: 1 cycle
+        out[s * m:(s + 1) * m] = seg
+    return out.reshape(rows, lanes)
+
+
+def chase_perm(shape, parts: int = 1):
+    """The pointer-chase buffer for ``latency_chase``: an int32 (rows, lanes)
+    array whose flat view is split into ``parts`` row-contiguous segments,
+    each holding one full permutation cycle of PART-LOCAL flat indices
+    0..m-1 (``flat[j]`` is the successor of ``j``).  Local indices make the
+    same buffer correct under mesh row-sharding (``parts=devices``: every
+    shard walks its own cycle) and Pallas row-tiling
+    (``parts=rows/block_rows``: every tile walks its own cycle).  Cycles are
+    a seeded random shuffle, so consecutive steps have no address locality a
+    prefetcher could exploit.  Cached; returns numpy (callers place it)."""
+    rows, lanes = shape
+    return _chase_perm_np(int(rows), int(lanes), int(parts))
+
+
+@partial(jax.jit, static_argnames=("passes", "unroll"))
+def k_chase(perm, passes: int, unroll: int = 1):
+    """The latency probe: one pass = n dependent loads ``j = flat[j]``
+    walking the full permutation cycle.  Every load's address is the
+    previous load's value, so loads cannot overlap, be batched, or be
+    hoisted — wall time per step is access latency by construction (the
+    audit's DCE/liveness check verifies the chain stays live; no waiver)."""
+    flat = perm.reshape(-1)
+    n = flat.shape[0]
+
+    def walk(j):
+        return jax.lax.fori_loop(0, n, lambda _, jj: flat[jj], j)
+
+    def body(_, carry):
+        j, acc = carry
+        j = walk(j)
+        return (j, acc + j.astype(jnp.float32))
+
+    j, acc = _pass_loop(body, passes, unroll,
+                        (jnp.int32(0), jnp.float32(0)))
+    return acc + j.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("passes", "unroll", "load"))
+def k_chase_loaded(perm, gen, passes: int, unroll: int = 1, load: int = 1):
+    """The single-device loaded-latency composite: the chase walk of
+    ``k_chase`` co-scheduled with ``load`` bandwidth generators, each
+    performing ``GEN_SWEEPS_PER_PASS`` load_sum sweeps of ``gen`` per probe
+    pass (a Mess generator runs for the probe's *duration*; on a serialized
+    substrate that is emulated by this fixed generator:probe work ratio).
+    Generator sweeps chain through the accumulator via ``_perturb`` — the
+    same anti-hoisting discipline as ``k_load_sum`` — so declared generator
+    traffic is what executes."""
+    flat = perm.reshape(-1)
+    n = flat.shape[0]
+
+    def walk(j):
+        return jax.lax.fori_loop(0, n, lambda _, jj: flat[jj], j)
+
+    def gsweep(_, c):
+        g, a = c
+        a = a + jnp.sum(g, dtype=jnp.float32)
+        return (_perturb(g, a), a)
+
+    def body(_, carry):
+        gen, j, acc = carry
+        j = walk(j)
+        gen, acc = jax.lax.fori_loop(0, load * GEN_SWEEPS_PER_PASS, gsweep,
+                                     (gen, acc + j.astype(jnp.float32)))
+        return (gen, j, acc)
+
+    _, j, acc = _pass_loop(body, passes, unroll,
+                           (gen, jnp.int32(0), jnp.float32(0)))
+    return acc + j.astype(jnp.float32)
+
+
 def run_mix(mix_name: str, x, passes: int, w=None, unroll: int = 1,
             interleave: int = 1):
     if interleave > 1:
@@ -387,6 +478,11 @@ def run_mix(mix_name: str, x, passes: int, w=None, unroll: int = 1,
         return k_mxu(x, w, passes, unroll)
     if mix_name == "triad":
         return k_triad(jnp.zeros_like(x), x, x * 0.5, passes, unroll)
+    if mix_name == "latency_chase":
+        # convenience path: x supplies only the shape — the probe walks a
+        # deterministic permutation buffer built here (the bench backends
+        # bind the perm outside the timed call)
+        return k_chase(jnp.asarray(chase_perm(x.shape)), passes, unroll)
     if mix_name.startswith("fma_"):
         return k_fma(x, passes, int(mix_name.split("_")[1]), unroll)
     if mix_name.startswith("rw_"):

@@ -107,6 +107,24 @@ def _rw_kernel(reads, writes, interleave, *refs):
             refs[reads + w][sl] = v
 
 
+def _chase_kernel(x_ref, o_ref):
+    """Latency probe tile: x_ref is an int32 (rows, lanes) tile holding one
+    full permutation cycle of TILE-LOCAL flat indices; walk it end to end
+    (``j = flat[j]``) so every load's address is the previous load's value —
+    dependent loads the pipeline cannot overlap.  The final index folds into
+    the revisited (1, 1) accumulator, keeping the whole chain live."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[0, 0] = jnp.float32(0.0)
+
+    flat = x_ref[...].reshape(-1)
+    j = jax.lax.fori_loop(0, flat.shape[0], lambda _, jj: flat[jj],
+                          jnp.int32(0))
+    o_ref[0, 0] += j.astype(jnp.float32)
+
+
 def _stream_index_map(streams: int, n_blocks: int):
     """Block visit order: i -> interleaved across `streams` equal segments.
     streams=1 is the sequential (single-pointer) walk."""
@@ -163,6 +181,19 @@ def membench_call(x, *, mix: str = "load_sum", depth: int = 8,
         w = jnp.eye(lanes, dtype=x.dtype)
         in_specs.append(pl.BlockSpec((lanes, lanes), lambda i: (0, 0)))
         operands.append(w)
+
+    if base_mix == "latency_chase":
+        # x is the int32 permutation buffer (see core.instruction_mix
+        # .chase_perm with parts = rows / block_rows): one pointer cycle per
+        # VMEM tile, walked serially inside the grid program
+        return pl.pallas_call(
+            _chase_kernel,
+            grid=(n_blocks,),
+            in_specs=in_specs[:1],
+            out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            interpret=interpret,
+        )(x)[0, 0]
 
     if base_mix == "copy":
         return pl.pallas_call(

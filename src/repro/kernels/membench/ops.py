@@ -58,7 +58,8 @@ def make_kernel(mix: str = "load_sum", depth: int = 8, block_rows: int = 128,
 def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
                       block_rows: int = 128, streams: int = 1,
                       interpret: bool = True, passes: int = 1,
-                      unroll: int = 1, interleave: int = 1):
+                      unroll: int = 1, interleave: int = 1,
+                      load: int = 0):
     """Like make_kernel, but loops ``passes`` times over the buffer inside one
     compiled call (the paper's measurement loop) so dispatch overhead does not
     swamp cache-resident working sets.  A one-element self-dependent
@@ -80,6 +81,12 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
     ``tests/data/hlo/dead_sweep_xla_copy_u4.txt``).  On real TPU the opaque
     pallas_call never had either hazard, and the slots only alias the output
     buffers the kernel writes anyway.
+
+    ``load`` > 0 (``latency_chase`` only — the bench spec gates it) builds
+    the loaded-latency composite fn(perm, gen): each probe pass is followed
+    by ``load * GEN_SWEEPS_PER_PASS`` load_sum generator sweeps of ``gen``,
+    chained through the accumulator — the same time-shared emulation as the
+    xla oracle ``k_chase_loaded``, so accounting parity holds.
     """
     from repro.core.instruction_mix import (_consume_slots, _pass_loop,
                                             _rotating_pass_loop)
@@ -138,6 +145,33 @@ def make_timed_kernel(mix: str = "load_sum", depth: int = 8,
         def fnc(x):
             return _carried(one, x, ())
         return fnc
+
+    if base_mix == "latency_chase" and load:
+        from repro.bench.mixes import GEN_SWEEPS_PER_PASS
+        gen_one = make_kernel("load_sum", depth=depth, block_rows=block_rows,
+                              streams=streams, interpret=interpret)
+        sweeps = load * GEN_SWEEPS_PER_PASS
+
+        @jax.jit
+        def fnl(x, g):         # x: int32 perm buffer; g: generator buffer
+            def gsweep(_, c):
+                g, acc = c
+                return _chain(g, gen_one(g), acc)
+
+            def body(_, carry):
+                x, g, acc = carry
+                # _chain's eps converts to x's int32 dtype, truncating the
+                # tiny float to 0 — a value-preserving, data-dependent write
+                # that keeps the perm cycle intact while chaining passes
+                x, acc = _chain(x, one(x), acc)
+                g, acc = jax.lax.fori_loop(0, sweeps, gsweep, (g, acc))
+                return (x, g, acc)
+
+            _, _, acc = _pass_loop(body, passes, unroll,
+                                   (x, g, jnp.float32(0)))
+            return acc
+
+        return fnl
 
     @jax.jit
     def fn(x):                 # scalar-output mixes: nothing to narrow

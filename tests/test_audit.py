@@ -157,7 +157,7 @@ def test_cli_audit_json(capsys):
     assert bench_main(["audit", "--goldens", str(HLO_DIR), "--json"]) == 0
     d = json.loads(capsys.readouterr().out)
     assert d["schema"] == "repro.audit/v1"
-    assert len(d["cases"]) == 22
+    assert len(d["cases"]) == 26
     assert d["summary"]["waived"] == 0
 
 
@@ -191,7 +191,7 @@ def test_goldens_manifest_covers_carried_unroll():
 def test_goldens_audit_clean():
     rep = audit_goldens(HLO_DIR)
     assert rep.ok and rep.exit_code() == EXIT_OK
-    assert len(rep.cases) == 22
+    assert len(rep.cases) == 26
     assert not rep.waived
 
 
@@ -348,10 +348,11 @@ def test_scalar_unroll_was_never_exempt():
 
 
 def test_smoke_grid_covers_unroll_axis():
-    """The CI fast-fail gate audits the unroll axis, not just base knobs."""
+    """The CI fast-fail gate audits the unroll AND load axes, not just base
+    knobs."""
     from repro.audit.verify import default_knob_grid
     assert default_knob_grid(smoke=True) == [{}, {"unroll": 2},
-                                             {"unroll": 4}]
+                                             {"unroll": 4}, {"load": 1}]
 
 
 # ---------------------------------------------------------------------------

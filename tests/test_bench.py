@@ -387,7 +387,7 @@ def test_cli_compare_prints_skipped(capsys):
 def test_spec_devices_roundtrip_and_v1_backcompat():
     s = BenchSpec(mixes=("load_sum",), backend="sharded", devices=1, **TINY)
     d = json.loads(s.to_json())
-    assert d["spec_version"] == 3 and d["devices"] == 1
+    assert d["spec_version"] == 4 and d["devices"] == 1
     assert BenchSpec.from_dict(d) == s
     old = {k: v for k, v in d.items()
            if k not in ("devices", "unroll", "interleave")}  # a v1 spec file

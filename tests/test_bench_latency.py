@@ -1,0 +1,293 @@
+"""The loaded-latency axis (latency_chase + spec ``load``) through the
+bench stack: spec validation gates, chase-permutation structure, per-mix
+pass sizing, xla/pallas composite parity, the compiled-case cache-key
+no-alias guarantee for ``load``, accounting audit (checked, never waived),
+the schema-v5 golden round-trip + older-schema defaults, the
+``summarize(key="load")`` grouped view, and the per-level knee fit round-
+tripping through ``FittedMachineModel`` (fitted-model schema v3)."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.bench import BenchResult, BenchSpec, BenchSpecError, Runner
+from repro.bench.mixes import GEN_SWEEPS_PER_PASS, get_mix
+from repro.bench.runner import CHASE_TARGET_STEPS, pick_passes
+
+DATA = Path(__file__).parent / "data"
+TINY = dict(sizes=(16 * 2**10,), reps=2, warmup=1)
+
+#: shared so repeated cases hit the compiled-case cache
+RUNNER = Runner()
+
+
+# ---------------------------------------------------------------------------
+# spec validation gates
+# ---------------------------------------------------------------------------
+
+def test_load_rejects_negative():
+    with pytest.raises(BenchSpecError, match="load"):
+        BenchSpec(mixes=("latency_chase",), load=-1, **TINY)
+
+
+def test_load_requires_chase_mix():
+    with pytest.raises(BenchSpecError, match="latency"):
+        BenchSpec(mixes=("copy",), load=1, **TINY)
+    # chase-only spec accepts any load; an idle (load=0) mixed spec is fine
+    BenchSpec(mixes=("latency_chase",), load=2, **TINY)
+    BenchSpec(mixes=("copy", "latency_chase"), **TINY)
+
+
+def test_sharded_gates_devices_equals_load_plus_one():
+    """The mesh composite places the probe on shard 0 and one generator per
+    sibling shard — the spec's devices must equal load + 1 (a backend rule,
+    enforced at Runner time like the other mesh gates)."""
+    spec = BenchSpec(mixes=("latency_chase",), backend="sharded", load=2,
+                     devices=2, **TINY)
+    with pytest.raises(BenchSpecError, match="load"):
+        Runner().run(spec)
+
+
+# ---------------------------------------------------------------------------
+# chase permutation: one full cycle per part
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("parts", [1, 4])
+def test_chase_perm_is_one_cycle_per_part(parts):
+    from repro.core.instruction_mix import chase_perm
+    rows, lanes = 16, 128
+    perm = chase_perm((rows, lanes), parts=parts)
+    flat = np.asarray(perm).reshape(-1)
+    m = flat.size // parts
+    for s in range(parts):
+        seg = flat[s * m:(s + 1) * m]
+        # part-local indices only (a mesh shard / pallas tile never reaches
+        # outside its own slice)
+        assert seg.min() >= 0 and seg.max() < m
+        j, seen = 0, 0
+        for _ in range(m):
+            j = seg[j]
+            seen += 1
+            if j == 0:
+                break
+        assert seen == m, f"part {s}: cycle length {seen} != {m}"
+
+
+def test_chase_kernel_walks_to_zero():
+    """A full-cycle walk starting at index 0 ends at index 0 every pass, so
+    the accumulated output is exactly 0.0 — value-level proof the kernel
+    walks complete cycles (a broken perm or early exit lands elsewhere)."""
+    import jax.numpy as jnp
+    from repro.core.instruction_mix import chase_perm, k_chase
+    perm = jnp.asarray(chase_perm((16, 128)))
+    assert float(k_chase(perm, 4)) == 0.0
+    assert float(k_chase(perm, 4, unroll=2)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-mix pass sizing (the latency-mix pick_passes fix)
+# ---------------------------------------------------------------------------
+
+def test_pick_passes_sizes_chase_by_steps_not_bytes():
+    """A chase case's wall time scales with steps x latency, not bytes /
+    bandwidth: pass count must come from CHASE_TARGET_STEPS, not the byte
+    target (which would demand ~6000 passes of a 32K buffer)."""
+    chase = get_mix("latency_chase")
+    n = 8192                                  # 32 KiB of f32
+    p = pick_passes(n * 4, mix=chase, n_elems=n)
+    assert p == CHASE_TARGET_STEPS // n
+    assert p < pick_passes(n * 4)             # far below the byte sizing
+    # a chain longer than the step target still walks once end to end
+    assert pick_passes(2**21 * 4, mix=chase, n_elems=2**21) == 1
+    # mesh: only the probe shard's slice is walked
+    assert pick_passes(n * 4, mix=chase, n_elems=n, devices=4) \
+        == CHASE_TARGET_STEPS // (n // 4)
+    # non-chase mixes keep the byte sizing
+    assert pick_passes(n * 4, mix=get_mix("copy")) == pick_passes(n * 4)
+
+
+# ---------------------------------------------------------------------------
+# compiled-case cache key: load never aliases
+# ---------------------------------------------------------------------------
+
+def test_cache_no_alias_regression_load():
+    """Two specs differing ONLY in ``load`` compile two distinct cases: the
+    second run must be a cache MISS (aliasing would time the idle walk and
+    report it as loaded), and identical knobs re-hit."""
+    from repro.bench.backends import _NON_CASE_FIELDS, case_knobs
+    assert "load" not in _NON_CASE_FIELDS
+    assert "load" in {name for name, _ in case_knobs(BenchSpec(**TINY))}
+    r = Runner()
+    base = BenchSpec(mixes=("latency_chase",), passes=4, **TINY)
+    r.run(base)
+    misses = r.cache_misses
+    r.run(base.replace(load=1))
+    assert r.cache_misses == misses + 1, "load=1 aliased the idle case"
+    r.run(base.replace(load=1))
+    assert r.cache_misses == misses + 1
+
+
+# ---------------------------------------------------------------------------
+# the measured composite: point fields, parity, monotonicity
+# ---------------------------------------------------------------------------
+
+def _lat_points(backend, loads, sizes=(16 * 2**10,)):
+    specs = [BenchSpec(mixes=("latency_chase",), sizes=sizes, passes=4,
+                       backend=backend, reps=3, warmup=1, load=load)
+             for load in loads]
+    return RUNNER.run_many(specs).points
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_chase_points_carry_latency_axes(backend):
+    pts = _lat_points(backend, (0, 2))
+    by_load = {p.load: p for p in pts}
+    assert set(by_load) == {0, 2}
+    idle, loaded = by_load[0], by_load[2]
+    assert idle.latency_ns and idle.latency_ns > 0
+    assert idle.gen_gbps == 0.0
+    assert loaded.gen_gbps > 0
+    # composite accounting: the loaded case declares the generator traffic
+    # (2 generators x GEN_SWEEPS_PER_PASS sweeps) on top of the probe walk
+    assert loaded.bytes_per_call == pytest.approx(
+        idle.bytes_per_call * (1 + 2 * GEN_SWEEPS_PER_PASS), rel=1e-6)
+    assert loaded.flops_per_call > 0 and idle.flops_per_call == 0
+
+
+def test_loaded_latency_monotone_under_load():
+    """Generators contend with the probe, so per-step latency at load=4
+    must not beat idle — the loaded-latency curve's defining property (the
+    time-shared composite makes this deterministic: every probe pass pays
+    for 4 x GEN_SWEEPS_PER_PASS generator sweeps)."""
+    by_load = {p.load: p for p in _lat_points("xla", (0, 4))}
+    assert by_load[4].latency_ns >= by_load[0].latency_ns
+
+
+def test_non_chase_points_default_latency_axes():
+    res = RUNNER.run(BenchSpec(mixes=("copy",), passes=4, **TINY))
+    for p in res.points:
+        assert p.load == 0 and p.latency_ns is None and p.gen_gbps is None
+
+
+# ---------------------------------------------------------------------------
+# accounting audit: chase is checked, never waived
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("load", [0, 1])
+def test_chase_audit_checked_clean(backend, load):
+    """The chase's dependent loads are unhoistable and its composite's
+    traffic has exact calibrated expectations — the auditor must CHECK the
+    case (no waiver class for latency mixes) and find it clean."""
+    from repro.audit import audit_case
+    shape = (64, 128)
+    spec = BenchSpec(mixes=("latency_chase",), sizes=(shape[0] * shape[1] * 4,),
+                     backend=backend, passes=4, reps=2, warmup=0, load=load)
+    a = audit_case(spec, "latency_chase", shape, "float32", 4)
+    assert not a.waived, a.waived_reason
+    assert a.ok, [c.detail for c in a.failures]
+    assert a.expected is not None and a.expected["loads"] > 0
+
+
+# ---------------------------------------------------------------------------
+# schema v5: golden round-trip, back-compat defaults, summarize(key="load")
+# ---------------------------------------------------------------------------
+
+def test_golden_v5_roundtrip():
+    """The schema-v5 fixture: a real loaded-latency sweep whose points
+    carry (load, latency_ns, gen_gbps) and whose meta stashes the knee fit;
+    the file round-trips bit-identically through from_dict/to_dict."""
+    res = BenchResult.from_json(DATA / "result_v5.json")
+    assert res.schema_version == 5
+    assert {p.load for p in res.points} == {0, 1, 2}
+    for p in res.points:
+        assert p.latency_ns > 0
+        assert (p.gen_gbps > 0) == (p.load > 0)
+    fit = res.meta["loaded_latency"]["fit"]
+    assert fit["levels"]["all"]["idle_latency_ns"] > 0
+    back = BenchResult.from_dict(json.loads(res.to_json()))
+    assert back.points == res.points and back.schema_version == 5
+
+
+@pytest.mark.parametrize("fname,ver", [
+    ("result_v1.json", 1), ("result_v2.json", 2), ("result_v3.json", 3),
+    ("result_v4.json", 4),
+])
+def test_golden_older_schemas_default_latency_axes(fname, ver):
+    """v1-v4 files load with the v5 defaults: load=0, latency_ns=None,
+    gen_gbps=None — the back-compat promise for the new columns."""
+    res = BenchResult.from_json(DATA / fname)
+    assert res.schema_version == ver
+    for p in res.points:
+        assert p.load == 0 and p.latency_ns is None and p.gen_gbps is None
+
+
+def test_summarize_string_key_groups_by_load():
+    res = BenchResult.from_json(DATA / "result_v5.json")
+    cells = res.summarize(key="load")["all"]
+    # string keys (JSON object keys) so the summary survives a meta stash
+    assert set(cells) == {"0", "1", "2"}
+    assert all(c["n"] == 1 for c in cells.values())
+    back = BenchResult.from_dict(json.loads(res.to_json()))
+    back.meta["by_load"] = res.summarize(key="load")
+    assert set(json.loads(back.to_json())["meta"]["by_load"]["all"]) \
+        == {"0", "1", "2"}
+
+
+# ---------------------------------------------------------------------------
+# knee fit + FittedMachineModel round-trip (fitted-model schema v3)
+# ---------------------------------------------------------------------------
+
+def _synth_points(loads_lats_gens, nbytes=16 * 2**10):
+    from repro.bench.result import BenchPoint
+    return [BenchPoint(nbytes=nbytes, mix="latency_chase", dtype="float32",
+                       backend="xla", passes=8, streams=1, block_rows=None,
+                       reps=3, bytes_per_call=1.0, flops_per_call=0.0,
+                       mean_s=1e-3, std_s=0.0, min_s=1e-3, gbps=1.0,
+                       gflops=0.0, load=load, latency_ns=lat, gen_gbps=gen)
+            for load, lat, gen in loads_lats_gens]
+
+
+def test_fit_knee_picks_last_point_on_plateau():
+    from repro.characterize import fit_knee
+    pts = _synth_points([(0, 40.0, 0.0), (1, 45.0, 2.0), (2, 55.0, 3.5),
+                         (4, 120.0, 4.0)])
+    knee = fit_knee(pts, factor=1.5)
+    assert knee["idle_latency_ns"] == 40.0
+    assert knee["knee_load"] == 2 and knee["knee_gen_gbps"] == 3.5
+    assert knee["max_latency_ns"] == 120.0
+    assert knee["loads"] == [0, 1, 2, 4]
+    # a single load level is not a curve
+    assert fit_knee(_synth_points([(0, 40.0, 0.0)])) is None
+
+
+def test_fit_loaded_bands_per_level():
+    from repro.characterize import fit_loaded
+    res = BenchResult(points=_synth_points(
+        [(0, 40.0, 0.0), (2, 80.0, 3.0)], nbytes=16 * 2**10)
+        + _synth_points([(0, 90.0, 0.0), (2, 100.0, 5.0)], nbytes=8 * 2**20))
+    fit = fit_loaded(res, levels=(("L1", 256 * 2**10), ("DRAM", None)),
+                     factor=1.5)
+    assert set(fit["levels"]) == {"L1", "DRAM"}
+    assert fit["levels"]["L1"]["idle_latency_ns"] == 40.0
+    assert fit["levels"]["L1"]["knee_load"] == 0      # 80 > 1.5 x 40
+    assert fit["levels"]["DRAM"]["knee_load"] == 2    # 100 < 1.5 x 90
+    assert fit["levels"]["DRAM"]["band"][1] is None   # JSON-safe open edge
+
+
+def test_fitted_model_roundtrips_loaded_latency():
+    from repro.characterize import (FITTED_SCHEMA_VERSION, FittedMachineModel,
+                                    fit_knee)
+    assert FITTED_SCHEMA_VERSION == 3
+    knee = fit_knee(_synth_points([(0, 40.0, 0.0), (2, 50.0, 3.0)]))
+    model = FittedMachineModel(
+        loaded_latency={"factor": 1.5, "levels": {"all": knee}})
+    back = FittedMachineModel.from_dict(json.loads(model.to_json()))
+    assert back.loaded_latency == model.loaded_latency
+    assert back.schema_version == 3
+    # pre-v3 files load with the default (None)
+    old = {k: v for k, v in model.to_dict().items()
+           if k not in ("loaded_latency",)}
+    old["schema_version"] = 2
+    assert FittedMachineModel.from_dict(old).loaded_latency is None

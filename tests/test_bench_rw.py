@@ -165,6 +165,11 @@ def _xla_reference(name, x64, p):
         return p * 1.75 * x64[0, 0] + 1.75 * x64[-1, -1]
     if name == "mxu":
         return p * x64[0, 0]
+    if m.chase:
+        # a full permutation-cycle walk always returns to its start index 0,
+        # so the accumulated final-position fold is exactly zero — any other
+        # value means the cycle structure (or the walk) is broken
+        return 0.0
     if m.fma_depth:
         return p * _fma_chain(x64, m.fma_depth).sum()
     if m.rw is not None:
@@ -190,6 +195,8 @@ def _pallas_reference(name, x64, p, block_rows):
         return p * 1.75 * x64[0, 0] + 1.75 * x64[-1, -1]
     if name == "mxu":
         return p * lead                        # blk @ eye accumulates [0, 0]
+    if m.chase:
+        return 0.0                             # tile-local cycles end at 0
     if m.fma_depth:
         return p * _fma_chain(x64, m.fma_depth).sum()
     if m.rw is not None:
@@ -341,9 +348,9 @@ def test_mix_names_deterministic_order():
     order, so CLI list-mixes output is stable."""
     names = mix_names()
     assert names == ["copy", "fma_1", "fma_2", "fma_4", "fma_8", "fma_16",
-                     "fma_32", "fma_64", "load_only", "load_sum", "mxu",
-                     "rw_1to2", "rw_1to1", "rw_2to1", "rw_3to1", "rw_4to1",
-                     "triad"]
+                     "fma_32", "fma_64", "latency_chase", "load_only",
+                     "load_sum", "mxu", "rw_1to2", "rw_1to1", "rw_2to1",
+                     "rw_3to1", "rw_4to1", "triad"]
     assert mix_names("pallas") == names
     assert "load_only" not in mix_names("xla")
     assert mix_names("sharded") == mix_names("xla")

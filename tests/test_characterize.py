@@ -213,7 +213,7 @@ def _fitted(levels=THREE_LEVEL, **kw):
 
 def test_characterize_pipeline_fits_all_mixes_every_level():
     model, sweep = _fitted()
-    assert model.schema_version == 2
+    assert model.schema_version == 3
     assert len(model.levels) == 3
     for lvl in model.levels:
         assert set(lvl.bandwidth) == {"load_sum", "copy", "fma_8", "fma_32"}
@@ -521,7 +521,7 @@ def test_cli_characterize_smoke(tmp_path, capsys):
                    "--report", str(report), "--compare", "fujitsu-a64fx"])
     assert rc == 0
     d = json.loads(out.read_text())
-    assert d["schema_version"] == 2
+    assert d["schema_version"] == 3
     assert d["levels"], "no detected levels in CLI output"
     assert "provenance" in d and d["provenance"]["backend"] == "xla"
     text = capsys.readouterr().out

@@ -358,6 +358,8 @@ def audit_counts(mix: MixDef, backend: str, shape, dtype: str, passes: int,
                                      or "no expectation for this backend")
                       if exp is None else None)
     if exp is None:
+        from repro.obs import metrics
+        metrics.REGISTRY.inc("audit_waivers")
         return audit
 
     # liveness first: an eliminated timed region fails loudly by name, not

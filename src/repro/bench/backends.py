@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.bench.mixes import MixDef, get_mix, interleavable
 from repro.bench.spec import BenchSpec, BenchSpecError, knob_names
+from repro.obs import trace
 
 
 #: BenchSpec fields that can NEVER change what make_case compiles — either
@@ -278,6 +279,8 @@ class XLABackend(_CaseBackend):
         _validate_oracle_knobs(spec, self.name)
 
     def make_case(self, spec, mix, shape, dtype, passes):
+        trace.event("backend.dispatch", backend=self.name, mix=mix.name,
+                    load=spec.load)
         return _oracle_case(spec, mix, shape[0], passes, self.name)
 
     def bind_case(self, case, spec, mix, x):
@@ -346,6 +349,11 @@ class _MeshOracleBackend(_CaseBackend):
             raise BenchSpecError(
                 f"devices={k} does not divide the {rows}-row working set")
         mesh = self._mesh(k)
+        # dispatch provenance: which backend, what mesh shape, and whether a
+        # generator co-schedule is composed in (the loaded-latency split)
+        trace.event("backend.dispatch", backend=self.name, mix=mix.name,
+                    mesh_shape=[k], load=spec.load,
+                    composite=bool(mix.chase and spec.load))
         n_args = _mix_arity(mix, spec.load)   # triad: (a,b,c); rw: R+W
 
         if mix.chase and spec.load:
@@ -553,6 +561,9 @@ class PallasBackend(_CaseBackend):
                 f"interleave {spec.interleave} does not divide the "
                 f"{rows}-row VMEM tile"
                 + _gate(self.name, "interleave | block_rows"))
+        trace.event("backend.dispatch", backend=self.name, mix=mix.name,
+                    block_rows=rows, interpret=spec.interpret,
+                    load=spec.load)
         return mb_ops.make_timed_kernel(
             mix.name, depth=mix.fma_depth or 8, block_rows=rows,
             streams=spec.streams, interpret=spec.interpret, passes=passes,

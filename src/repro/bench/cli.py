@@ -21,16 +21,26 @@ launch.
     launch      spawn N coordinated local processes running ``run --backend
                 distributed`` with forced host devices — the single-machine
                 simulation of a multi-host Fig-4 scaling study
+    history     list the persistent run ledger (BENCH_history/); --add
+                ingests a saved result JSON as a record (repro.obs.ledger)
+    diff        noise-aware bandwidth comparison against a ledger baseline
+                (characterize.detect two-sample test); exit 2 on regression
+
+Measuring commands take ``--trace PATH`` (span tracing -> Perfetto JSON),
+append a ledger record unless ``--no-ledger``, and refuse to overwrite an
+existing ``--out``/``--report`` file unless ``--force``.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 from repro.bench.mixes import registry
 from repro.bench.runner import Runner
 from repro.bench.spec import BenchSpec, BenchSpecError, quick_spec
+from repro.obs import ledger, trace
 
 
 def _parse_sizes(s: str) -> tuple[int, ...]:
@@ -115,18 +125,68 @@ def _add_grid_flags(p: argparse.ArgumentParser):
                    help="comma list of chain counts")
 
 
+def _add_obs_flags(p: argparse.ArgumentParser):
+    """Observability flags shared by every measuring command (repro.obs)."""
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="enable span tracing; write a Perfetto-loadable "
+                        "Chrome trace JSON (or .jsonl event log) here")
+    p.add_argument("--force", action="store_true",
+                   help="overwrite existing output files (refused otherwise)")
+    p.add_argument("--no-ledger", dest="no_ledger", action="store_true",
+                   help="skip appending this run to the history ledger")
+    p.add_argument("--history-root", dest="history_root", default=None,
+                   help=f"ledger directory (default: ${ledger.LEDGER_ENV} "
+                        f"or {ledger.DEFAULT_ROOT}/)")
+
+
+def _check_overwrite(args, *attrs: str) -> None:
+    """Refuse to clobber an existing output file unless --force — checked
+    BEFORE the (possibly minutes-long) measurement, not after."""
+    for a in attrs:
+        path = getattr(args, a, None)
+        if path and os.path.exists(path) and not getattr(args, "force", False):
+            raise BenchSpecError(
+                f"refusing to overwrite existing {path!r}; pass --force")
+
+
+def _obs_begin(args) -> None:
+    if getattr(args, "trace", None):
+        trace.configure(enabled=True, clear=True)
+
+
+def _obs_finish(args, res, cmd: str) -> None:
+    """Write the trace and append the run's ledger record (call on the
+    primary process only — the distributed gather has already merged the
+    other processes' events into this tracer)."""
+    trace_path = None
+    if getattr(args, "trace", None):
+        tr = trace.get_tracer()
+        trace_path = tr.write(args.trace)
+        print(f"# saved trace ({len(tr.events())} events) -> {trace_path}")
+    if not getattr(args, "no_ledger", False):
+        path, rec = ledger.append_record(
+            res, cmd=cmd, trace_path=trace_path,
+            out_path=getattr(args, "out", None),
+            root=getattr(args, "history_root", None))
+        print(f"# ledger += {rec['spec_digest']} "
+              f"({len(rec['curves'])} cells) -> {path}")
+
+
 def cmd_run(args) -> int:
     # distributed init must precede the first jax.devices() call (spec
     # validation touches the backend registry's meshes); a no-op outside a
     # multi-process launch
+    _check_overwrite(args, "out")
     from repro.bench import distributed as dist
     dist.ensure_initialized()
+    _obs_begin(args)
     spec = _spec_from_args(args)
     res = dist.gather_result(Runner().run(spec))
     if not dist.is_primary():
         print(f"# process {dist.process_index()}/{dist.process_count()} "
               f"done ({len(res.points)} points gathered by process 0)")
         return 0
+    _obs_finish(args, res, "run")
     text = res.to_json(args.out)
     if args.out:
         for p in res.points:
@@ -155,6 +215,7 @@ def cmd_list_mixes(args) -> int:
 
 
 def cmd_compare(args) -> int:
+    _check_overwrite(args, "out")
     backends = tuple(args.backends.split(","))
     if args.spec:
         spec = BenchSpec.from_json(args.spec)
@@ -207,6 +268,8 @@ def cmd_characterize(args) -> int:
     from repro.characterize import characterize, render_markdown, write_report
     from repro.core.machine_model import get_spec
 
+    _check_overwrite(args, "out", "report")
+    _obs_begin(args)
     kw: dict = dict(backend=args.backend, resolution=args.resolution,
                     max_rounds=args.max_rounds)
     if args.smoke:
@@ -231,6 +294,7 @@ def cmd_characterize(args) -> int:
         kw["spec_kw"] = {"interpret": args.interpret}
 
     model, sweep = characterize(mixes=mixes, primary=mixes[0], **kw)
+    _obs_finish(args, sweep.result, "characterize")
     documented = get_spec(args.compare) if args.compare else None
     print(render_markdown(model, sweep, documented))
     if args.out:
@@ -252,6 +316,8 @@ def cmd_istream(args) -> int:
     BOTH labels), then a seconds-scale end-to-end sweep."""
     from repro.istream import run_istream, synthetic_check
 
+    _check_overwrite(args, "out")
+    _obs_begin(args)
     if args.smoke:
         chk = synthetic_check()
         print(f"# synthetic check: {chk['labels']} "
@@ -278,6 +344,7 @@ def cmd_istream(args) -> int:
     if args.reps is not None:
         kw["reps"] = args.reps
     report = run_istream(**kw)
+    _obs_finish(args, report.result, "istream")
     print(report.table)
     labels = report.labels
     if args.out:
@@ -303,6 +370,7 @@ def cmd_audit(args) -> int:
     ``--write-goldens DIR`` regenerates those fixtures."""
     from repro.audit import (audit_goldens, audit_registry, write_goldens)
 
+    _check_overwrite(args, "out")
     if args.write_goldens:
         manifest = write_goldens(args.write_goldens)
         print(f"# wrote {len(manifest['cases'])} golden HLO fixtures "
@@ -356,6 +424,8 @@ def cmd_latency(args) -> int:
     — never waived — and clean (exit 2 otherwise)."""
     from repro.characterize.loaded import fit_loaded, loaded_latency_sweep
 
+    _check_overwrite(args, "out")
+    _obs_begin(args)
     sizes = _parse_sizes(args.sizes) if args.sizes else \
         ((128 * 2**10,) if args.smoke else (128 * 2**10, 16 * 2**20))
     loads = tuple(int(tok) for tok in args.loads.split(",")) if args.loads \
@@ -396,6 +466,7 @@ def cmd_latency(args) -> int:
             print("error: latency_chase accounting must be checked clean on "
                   "both backends (got a waiver or violation)", file=sys.stderr)
             rc = 2
+    _obs_finish(args, res, "latency")
     if args.out:
         res.to_json(args.out)
         print(f"# saved {len(res.points)} points "
@@ -436,6 +507,58 @@ def cmd_launch(args) -> int:
                              timeout=args.timeout or None)
 
 
+def cmd_history(args) -> int:
+    """List the persistent run ledger (see repro.obs.ledger).  ``--add``
+    first ingests a file — a saved ledger record or a full BenchResult
+    JSON (summarized on the fly), which is how CI folds the committed
+    fig-artifact results into the history it diffs against."""
+    root = args.history_root
+    if args.add:
+        rec = ledger.resolve_ref(args.add, root=root)
+        path, rec = ledger.append_record(rec, root=root)
+        print(f"# ledger += {rec['spec_digest']} "
+              f"({len(rec.get('curves') or [])} cells) -> {path}")
+    records = ledger.read_ledger(root)
+    if args.json:
+        print(json.dumps(records, indent=1))
+        return 0
+    if not records:
+        print(f"# empty ledger at {ledger.ledger_root(root)}")
+        return 0
+    import datetime
+    print(f"{'idx':>3s} {'when':19s} {'cmd':12s} {'digest':12s} "
+          f"{'backend':11s} {'cells':>5s} mixes")
+    for i, r in enumerate(records):
+        t = datetime.datetime.fromtimestamp(r.get("time_unix_s", 0))
+        print(f"{i:3d} {t:%Y-%m-%d %H:%M:%S} {r.get('cmd', '?'):12s} "
+              f"{r.get('spec_digest', '?'):12s} "
+              f"{str(r.get('backend') or '-'):11s} "
+              f"{len(r.get('curves') or []):5d} "
+              f"{','.join(r.get('mixes') or [])}")
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """Noise-aware bandwidth diff against a ledger baseline (see
+    repro.obs.ledger.diff_records): per curve cell, the two-sample
+    log-bandwidth test of ``characterize.detect.significant_step``.
+    Exit 0 when nothing significantly dropped, 2 on regression."""
+    root = args.history_root
+    base = ledger.resolve_ref(args.baseline, root=root)
+    cur = ledger.resolve_ref(args.current, root=root)
+    report = ledger.diff_records(base, cur, z=args.z,
+                                 tolerance=args.tolerance)
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=1))
+    else:
+        print(report.table())
+    for r in report.regressions:
+        print(f"error: bandwidth regression at {r['cell']}: "
+              f"{r['base_gbps']:.2f} -> {r['cur_gbps']:.2f} GB/s "
+              f"(ratio {r['ratio']:.3f})", file=sys.stderr)
+    return report.exit_code()
+
+
 def main(argv=None) -> int:
     # allow_abbrev everywhere: `launch --devices 4` must reach the workers
     # as the spec's devices knob, not silently match --devices-per-process
@@ -447,6 +570,7 @@ def main(argv=None) -> int:
                            allow_abbrev=False)
     _add_spec_flags(p_run)
     p_run.add_argument("--out", default=None, help="write result JSON here")
+    _add_obs_flags(p_run)
     p_run.set_defaults(fn=cmd_run)
 
     p_list = sub.add_parser("list-mixes", help="show the mix registry")
@@ -457,6 +581,8 @@ def main(argv=None) -> int:
     _add_spec_flags(p_cmp)
     p_cmp.add_argument("--backends", default="xla,pallas")
     p_cmp.add_argument("--out", default=None)
+    p_cmp.add_argument("--force", action="store_true",
+                       help="overwrite an existing --out file")
     p_cmp.set_defaults(fn=cmd_compare)
 
     p_chz = sub.add_parser(
@@ -484,6 +610,7 @@ def main(argv=None) -> int:
                        help="write the FittedMachineModel JSON here")
     p_chz.add_argument("--report", default=None,
                        help="write a markdown (.md) or JSON (.json) report")
+    _add_obs_flags(p_chz)
     p_chz.set_defaults(fn=cmd_characterize)
 
     p_ist = sub.add_parser(
@@ -501,6 +628,7 @@ def main(argv=None) -> int:
                             "(else self-calibrated from the sweep)")
     p_ist.add_argument("--out", default=None,
                        help="write the classified result JSON here")
+    _add_obs_flags(p_ist)
     p_ist.set_defaults(fn=cmd_istream)
 
     p_aud = sub.add_parser(
@@ -524,6 +652,8 @@ def main(argv=None) -> int:
                        help="print the full JSON report instead of the table")
     p_aud.add_argument("--out", default=None,
                        help="write the audit report JSON here")
+    p_aud.add_argument("--force", action="store_true",
+                       help="overwrite an existing --out file")
     p_aud.set_defaults(fn=cmd_audit)
 
     p_lat = sub.add_parser(
@@ -546,7 +676,8 @@ def main(argv=None) -> int:
                             "(default: 0,1,2 smoke, 0,1,2,4 full)")
     p_lat.add_argument("--reps", type=int, default=None)
     p_lat.add_argument("--out", default=None,
-                       help="write the schema-v5 result JSON here")
+                       help="write the result JSON here")
+    _add_obs_flags(p_lat)
     p_lat.set_defaults(fn=cmd_latency)
 
     p_launch = sub.add_parser(
@@ -565,6 +696,39 @@ def main(argv=None) -> int:
     p_launch.add_argument("--out", default=None,
                           help="gathered result JSON (written by process 0)")
     p_launch.set_defaults(fn=cmd_launch, takes_worker_flags=True)
+
+    p_hist = sub.add_parser(
+        "history", help="list the persistent run ledger (repro.obs.ledger)",
+        allow_abbrev=False)
+    p_hist.add_argument("--add", default=None, metavar="FILE",
+                        help="ingest a saved result/record JSON as a ledger "
+                             "record first")
+    p_hist.add_argument("--history-root", dest="history_root", default=None,
+                        help=f"ledger directory (default: "
+                             f"${ledger.LEDGER_ENV} or {ledger.DEFAULT_ROOT}/)")
+    p_hist.add_argument("--json", action="store_true",
+                        help="print raw records instead of the table")
+    p_hist.set_defaults(fn=cmd_history)
+
+    p_diff = sub.add_parser(
+        "diff", help="noise-aware bandwidth diff vs a ledger baseline "
+                     "(exit 2 on regression)",
+        allow_abbrev=False)
+    p_diff.add_argument("--baseline", required=True,
+                        help="ledger index (-1 = newest), 'latest', a spec-"
+                             "digest prefix, or a record/result JSON file")
+    p_diff.add_argument("--current", default="latest",
+                        help="same forms (default: latest)")
+    p_diff.add_argument("--z", type=float, default=3.0,
+                        help="noise-test z score (detect.significant_step)")
+    p_diff.add_argument("--tolerance", type=float, default=0.05,
+                        help="minimum relative drop treated as real")
+    p_diff.add_argument("--history-root", dest="history_root", default=None,
+                        help=f"ledger directory (default: "
+                             f"${ledger.LEDGER_ENV} or {ledger.DEFAULT_ROOT}/)")
+    p_diff.add_argument("--json", action="store_true",
+                        help="print the full diff report JSON")
+    p_diff.set_defaults(fn=cmd_diff)
 
     # `launch` forwards unknown flags (--mixes/--sizes/--devices/...) to its
     # `run` workers verbatim; every other command treats extras as errors

@@ -36,6 +36,8 @@ import sys
 import threading
 import time
 
+from repro.obs import metrics, trace
+
 #: env vars read by ``env_info`` (REPRO_* first, then JAX's own names)
 ENV_COORDINATOR = ("REPRO_COORDINATOR", "JAX_COORDINATOR_ADDRESS")
 ENV_NUM_PROCESSES = ("REPRO_NUM_PROCESSES", "JAX_NUM_PROCESSES")
@@ -196,7 +198,47 @@ def gather_result(res):
     res.meta["per_process_mean_s"] = stats[:, :, 0].tolist()
     res.machine["process_count"] = jax.process_count()
     res.machine["local_device_counts"] = [int(r[1]) for r in rows]
+    _gather_traces()
     return res
+
+
+def _gather_traces() -> None:
+    """Allgather every process's span-trace events and install the merged
+    stream (pids re-stamped to mesh process indices) on ALL processes —
+    process 0 then writes ONE trace showing probe and generator shards,
+    stragglers included.  A no-op while tracing is disabled (nothing is
+    gathered, zero cost).  Events are self-describing variable-length JSON,
+    so each allgathered row carries its own 8-byte length header and pads
+    to the global max — row *order* from the collective is irrelevant."""
+    import jax
+    tr = trace.get_tracer()
+    if not tr.enabled or jax.process_count() == 1:
+        return
+    import json
+
+    import numpy as np
+    from jax.experimental import multihost_utils
+
+    events = tr.events()
+    for e in events:        # stamp mesh identity before the OS pid is lost
+        e["pid"] = jax.process_index()
+    payload = np.frombuffer(json.dumps(events).encode(), dtype=np.uint8)
+    sizes = multihost_utils.process_allgather(
+        np.array([payload.size], dtype=np.int64))
+    cap = int(np.max(sizes))
+    row = np.zeros(cap + 8, dtype=np.uint8)
+    row[:8] = np.frombuffer(np.array([payload.size], "<i8").tobytes(),
+                            np.uint8)
+    row[8:8 + payload.size] = payload
+    gathered = multihost_utils.process_allgather(row)
+    per_proc: dict[int, list[dict]] = {}
+    for r in np.asarray(gathered).reshape(-1, cap + 8):
+        n = int(np.frombuffer(bytes(r[:8]), "<i8")[0])
+        evs = json.loads(bytes(r[8:8 + n]).decode())
+        if evs:
+            per_proc[evs[0]["pid"]] = evs
+    streams = [per_proc.get(i, []) for i in range(jax.process_count())]
+    tr.replace_events(trace.merge_process_traces(streams))
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +288,10 @@ def launch_local(cmd: list[str], processes: int,
     procs, pumps = [], []
     deadline = None if timeout is None else time.monotonic() + timeout
     rc = 0
+    tr = trace.get_tracer()
+    launch_span = tr.span("launch.local", cat="launch", processes=processes,
+                          devices_per_process=devices_per_process)
+    launch_span.__enter__()
     try:
         # spawn INSIDE the cleanup scope: a Popen failure partway through
         # (EMFILE, OOM) must not leak already-started children blocked at
@@ -278,6 +324,8 @@ def launch_local(cmd: list[str], processes: int,
             if deadline is not None and time.monotonic() > deadline:
                 sink.write(f"# launch_local: timeout after {timeout}s, "
                            f"killing {len(pending)} process(es)\n")
+                tr.event("launch.timeout", cat="launch", timeout_s=timeout,
+                         pending=len(pending))
                 rc = 1
                 break
             if pending:
@@ -288,6 +336,10 @@ def launch_local(cmd: list[str], processes: int,
                 p.kill()
                 p.wait()
                 rc = max(rc, 1)
+                metrics.REGISTRY.inc("straggler_kills")
+                tr.event("launch.straggler_kill", cat="launch",
+                         process=procs.index(p), rc=rc)
+        launch_span.__exit__(None, None, None)
     for t in pumps:
         t.join(timeout=5)
     return rc

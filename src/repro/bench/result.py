@@ -19,7 +19,14 @@ per-point compiled-IR instruction profile + bandwidth-vs-issue-bound label
 attached by ``repro.istream``; 5 = points carry the loaded-latency axes
 (``load`` generator count, per-step ``latency_ns``, aggregate generator
 ``gen_gbps`` — the Mess-style bandwidth–latency curve coordinates; None /
-0 on non-chase points).  Older files load unchanged with the defaults.
+0 on non-chase points); 6 = points retain their raw per-rep timing samples
+(``rep_times_s``, bounded to the last ``REP_SAMPLE_LIMIT`` reps — enough
+for the run ledger's noise-aware regression test to compute per-cell CIs
+instead of trusting the mean triple) and the envelope meta carries the
+``obs`` observability snapshot (``repro.obs``: per-run counter deltas —
+cache hits/misses, buffer lifecycle, peak working-set bytes — plus the
+Runner's cumulative cache counters, which used to die with the Runner
+object).  Older files load unchanged with the defaults.
 """
 from __future__ import annotations
 
@@ -29,7 +36,12 @@ import platform
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
+
+#: per-point raw-sample retention (schema v6): the last this-many rep
+#: timings survive into the result — bounded so a 10k-rep soak doesn't
+#: bloat every record, plenty for a two-sample noise test
+REP_SAMPLE_LIMIT = 64
 
 
 def level_band(level_size: int | None,
@@ -73,6 +85,17 @@ class BenchPoint:
     #   step (chase mixes only; the loaded-latency curve's y axis)
     gen_gbps: float | None = None       # schema v5: aggregate generator GB/s
     #   (chase mixes: 0.0 at load=0; the loaded-latency curve's x axis)
+    rep_times_s: tuple[float, ...] | None = None    # schema v6: raw per-rep
+    #   timings, last REP_SAMPLE_LIMIT reps (None on pre-v6 files) — the
+    #   ledger's regression gate derives per-cell noise sigmas from these
+
+    def __post_init__(self):
+        # canonicalize to a tuple so the frozen point stays hashable (JSON
+        # round-trips hand from_dict a list); baseline_relative groups
+        # points in dicts
+        if self.rep_times_s is not None and not isinstance(self.rep_times_s,
+                                                           tuple):
+            object.__setattr__(self, "rep_times_s", tuple(self.rep_times_s))
 
 
 @dataclass

@@ -20,8 +20,10 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.bench.backends import get_backend
-from repro.bench.result import BenchPoint, BenchResult, machine_meta
+from repro.bench.result import (REP_SAMPLE_LIMIT, BenchPoint, BenchResult,
+                                machine_meta)
 from repro.bench.spec import BenchSpec, BenchSpecError
+from repro.obs import metrics, trace
 
 
 #: serial dependent-load steps per timed call for chase mixes — the latency
@@ -80,24 +82,59 @@ class Runner:
 
     # -- compiled-case cache --------------------------------------------
     def _case(self, backend, spec: BenchSpec, mix, shape, dtype, passes: int):
-        """Cache-aware make_case; returns the compiled callable-of-buffers."""
+        """Cache-aware make_case; returns the compiled callable-of-buffers.
+        Every lookup emits a ``cache`` trace event with its outcome and
+        bumps the matching obs counter — the result's ``meta["obs"]``
+        counters and the trace agree by construction."""
+        tr = trace.get_tracer()
         key = backend.case_key(spec, mix, shape, dtype, passes)
         case = self._cases.get(key)
         if case is None:
             self.cache_misses += 1
-            case = backend.make_case(spec, mix, shape, dtype, passes)
+            metrics.REGISTRY.inc("cache_misses")
+            tr.event("cache", outcome="miss", mix=mix.name,
+                     backend=backend.name)
+            with tr.span("case.build", mix=mix.name, backend=backend.name,
+                         passes=passes):
+                case = backend.make_case(spec, mix, shape, dtype, passes)
             self._cases[key] = case
         else:
             self.cache_hits += 1
+            metrics.REGISTRY.inc("cache_hits")
+            tr.event("cache", outcome="hit", mix=mix.name,
+                     backend=backend.name)
         return case
 
     def run(self, spec: BenchSpec, extra_meta: dict | None = None
             ) -> BenchResult:
+        """Execute one spec.  Observability (repro.obs): the whole run is a
+        ``runner.run`` span with ``runner.plan`` and per-size ``runner.size``
+        children (buffer build/release, per-case timing), the obs counter
+        registry collects this run's delta (cache outcomes, buffer
+        lifecycle, peak working set), and both land in ``meta["obs"]``
+        (result schema v6) together with the Runner's cumulative cache
+        counters — which previously died with the Runner object."""
+        tr = trace.get_tracer()
+        with metrics.REGISTRY.scope() as mscope, \
+                tr.span("runner.run", backend=spec.backend,
+                        mixes=list(spec.mixes), sizes=list(spec.sizes),
+                        devices=spec.devices):
+            res = self._run_traced(spec, extra_meta, tr)
+            obs = mscope.delta()
+            # THIS run's peak, not the scope delta: the global gauge is a
+            # process-lifetime high-water mark, so a run smaller than an
+            # earlier one would otherwise report no peak at all
+            if res.points:
+                obs.setdefault("gauges", {})["peak_working_set_bytes"] = \
+                    max(p.nbytes for p in res.points)
+            obs["runner"] = {"cache_hits": self.cache_hits,
+                             "cache_misses": self.cache_misses}
+            res.meta["obs"] = obs
+        return res
+
+    def _run_traced(self, spec: BenchSpec, extra_meta, tr) -> BenchResult:
         from repro.bench.mixes import get_mix
         from repro.core import buffers, timing
-        backend = get_backend(spec.backend)
-        backend.validate(spec)
-        cacheable = hasattr(backend, "make_case")
 
         # plan every case up front from shapes alone (no buffers yet): a
         # data-dependent knob error (block_rows / streams / devices not
@@ -107,76 +144,99 @@ class Runner:
         # data-dependent errors surface lazily, when their size is reached)
         plan = []       # (nbytes, shape, [(mix, passes, case|None, bpc, fpc)])
         dtype = jnp.dtype(spec.dtype)
-        for nbytes in spec.sizes:
-            shape = buffers.working_set_shape(nbytes, dtype=dtype)
-            n_elems = shape[0] * shape[1]
-            real_bytes = n_elems * dtype.itemsize
-            group = []
-            for name in spec.mixes:
-                mix = get_mix(name)
-                # per-MIX pass picking: a chase mix is sized by chain steps,
-                # a bandwidth mix by bytes (same answer for uniform specs)
-                passes = spec.passes or pick_passes(
-                    real_bytes, spec.target_bytes, mix=mix,
-                    n_elems=n_elems, devices=spec.devices)
-                if passes % spec.unroll:
-                    # auto-picked passes round UP to whole unrolled loop
-                    # bodies (explicit spec.passes is validated to divide)
-                    passes += spec.unroll - passes % spec.unroll
-                case = (self._case(backend, spec, mix, shape, dtype, passes)
-                        if cacheable else None)
-                if mix.chase:
-                    bpc, fpc = _chase_accounting(mix, spec, real_bytes,
-                                                 n_elems, passes)
-                else:
-                    bpc = mix.bytes_per_pass(real_bytes) * passes
-                    fpc = mix.flops_per_pass(n_elems) * passes
-                group.append((mix, passes, case, bpc, fpc))
-            plan.append((real_bytes, shape, group))
+        with tr.span("runner.plan", sizes=len(spec.sizes),
+                     mixes=len(spec.mixes)):
+            backend = get_backend(spec.backend)
+            backend.validate(spec)
+            cacheable = hasattr(backend, "make_case")
+            for nbytes in spec.sizes:
+                shape = buffers.working_set_shape(nbytes, dtype=dtype)
+                n_elems = shape[0] * shape[1]
+                real_bytes = n_elems * dtype.itemsize
+                group = []
+                for name in spec.mixes:
+                    mix = get_mix(name)
+                    # per-MIX pass picking: a chase mix is sized by chain
+                    # steps, a bandwidth mix by bytes (same answer for
+                    # uniform specs)
+                    passes = spec.passes or pick_passes(
+                        real_bytes, spec.target_bytes, mix=mix,
+                        n_elems=n_elems, devices=spec.devices)
+                    if passes % spec.unroll:
+                        # auto-picked passes round UP to whole unrolled loop
+                        # bodies (explicit spec.passes is validated to divide)
+                        passes += spec.unroll - passes % spec.unroll
+                    case = (self._case(backend, spec, mix, shape, dtype,
+                                       passes)
+                            if cacheable else None)
+                    if mix.chase:
+                        bpc, fpc = _chase_accounting(mix, spec, real_bytes,
+                                                     n_elems, passes)
+                    else:
+                        bpc = mix.bytes_per_pass(real_bytes) * passes
+                        fpc = mix.flops_per_pass(n_elems) * passes
+                    group.append((mix, passes, case, bpc, fpc))
+                plan.append((real_bytes, shape, group))
 
-        res = BenchResult(
-            spec=spec.to_dict(), machine=machine_meta(),
-            meta={"dtype": spec.dtype, "reps": spec.reps,
-                  "sizes": list(spec.sizes), "mixes": list(spec.mixes),
-                  **(extra_meta or {})})
+        with tr.span("runner.meta"):    # machine_meta touches jax.devices()
+            res = BenchResult(
+                spec=spec.to_dict(), machine=machine_meta(),
+                meta={"dtype": spec.dtype, "reps": spec.reps,
+                      "sizes": list(spec.sizes), "mixes": list(spec.mixes),
+                      **(extra_meta or {})})
         prepare = getattr(backend, "prepare_buffer", None)
         for nbytes, (real_bytes, shape, group) in zip(spec.sizes, plan):
-            # lazy build: exactly one working set lives at a time
-            x = buffers.working_set(nbytes, dtype=dtype, value=spec.value)
-            if prepare is not None:     # e.g. sharded: one mesh placement
-                x = prepare(spec, x)    # per size, shared by every mix
-            for mix, passes, case, bpc, fpc in group:
-                if case is not None:
-                    fn = backend.bind_case(case, spec, mix, x)
-                else:
-                    fn = backend.build(spec, mix, x, passes)
-                t = timing.time_fn(fn, reps=spec.reps, warmup=spec.warmup,
-                                   bytes_per_call=bpc, flops_per_call=fpc)
-                del fn      # drop companion buffers with the case binding
-                latency_ns = gen_gbps = None
-                if mix.chase:
-                    # the Mess-curve coordinates: ns per dependent step of
-                    # the probe shard's walk, and aggregate generator GB/s
-                    from repro.bench.mixes import GEN_SWEEPS_PER_PASS
-                    k = max(spec.devices, 1)
-                    n_elems = shape[0] * shape[1]
-                    steps = passes * max(n_elems // k, 1)
-                    latency_ns = t.mean_s * 1e9 / steps
-                    gen_bytes = (spec.load * GEN_SWEEPS_PER_PASS
-                                 * real_bytes / k) * passes
-                    gen_gbps = gen_bytes / t.mean_s / 1e9
-                res.points.append(BenchPoint(
-                    nbytes=real_bytes, nbytes_requested=nbytes,
-                    mix=mix.name, dtype=spec.dtype,
-                    backend=spec.backend, passes=passes, streams=spec.streams,
-                    block_rows=spec.block_rows, reps=spec.reps,
-                    bytes_per_call=bpc, flops_per_call=fpc,
-                    mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
-                    gbps=t.gbps, gflops=t.gflops, devices=spec.devices,
-                    unroll=spec.unroll, interleave=spec.interleave,
-                    load=spec.load, latency_ns=latency_ns,
-                    gen_gbps=gen_gbps))
-            del x           # release this size before building the next
+            with tr.span("runner.size", nbytes=real_bytes):
+                # lazy build: exactly one working set lives at a time
+                with tr.span("buffers.build", nbytes=real_bytes):
+                    x = buffers.working_set(nbytes, dtype=dtype,
+                                            value=spec.value)
+                    if prepare is not None:  # e.g. sharded: one mesh
+                        x = prepare(spec, x)  # placement, shared per size
+                metrics.REGISTRY.inc("buffers_built")
+                metrics.REGISTRY.gauge_max("peak_working_set_bytes",
+                                           real_bytes)
+                for mix, passes, case, bpc, fpc in group:
+                    with tr.span("runner.case", mix=mix.name, passes=passes,
+                                 reps=spec.reps):
+                        if case is not None:
+                            fn = backend.bind_case(case, spec, mix, x)
+                        else:
+                            fn = backend.build(spec, mix, x, passes)
+                        t = timing.time_fn(fn, reps=spec.reps,
+                                           warmup=spec.warmup,
+                                           bytes_per_call=bpc,
+                                           flops_per_call=fpc)
+                        del fn  # drop companions with the case binding
+                    latency_ns = gen_gbps = None
+                    if mix.chase:
+                        # the Mess-curve coordinates: ns per dependent step
+                        # of the probe shard's walk, and aggregate generator
+                        # GB/s
+                        from repro.bench.mixes import GEN_SWEEPS_PER_PASS
+                        k = max(spec.devices, 1)
+                        n_elems = shape[0] * shape[1]
+                        steps = passes * max(n_elems // k, 1)
+                        latency_ns = t.mean_s * 1e9 / steps
+                        gen_bytes = (spec.load * GEN_SWEEPS_PER_PASS
+                                     * real_bytes / k) * passes
+                        gen_gbps = gen_bytes / t.mean_s / 1e9
+                    res.points.append(BenchPoint(
+                        nbytes=real_bytes, nbytes_requested=nbytes,
+                        mix=mix.name, dtype=spec.dtype,
+                        backend=spec.backend, passes=passes,
+                        streams=spec.streams,
+                        block_rows=spec.block_rows, reps=spec.reps,
+                        bytes_per_call=bpc, flops_per_call=fpc,
+                        mean_s=t.mean_s, std_s=t.std_s, min_s=t.min_s,
+                        gbps=t.gbps, gflops=t.gflops, devices=spec.devices,
+                        unroll=spec.unroll, interleave=spec.interleave,
+                        load=spec.load, latency_ns=latency_ns,
+                        gen_gbps=gen_gbps,
+                        rep_times_s=t.samples(REP_SAMPLE_LIMIT)))
+                del x       # release this size before building the next
+                metrics.REGISTRY.inc("buffers_released")
+                tr.event("buffers.release", nbytes=real_bytes)
         return res
 
     def run_many(self, specs, extra_meta: dict | None = None) -> BenchResult:
@@ -213,6 +273,10 @@ class Runner:
                     if item not in vals:
                         vals.append(item)
             merged.meta[key] = vals[0] if len(vals) == 1 else vals
+        # obs counters fold across the merged runs (sum counters, max
+        # gauges); the Runner-cumulative block already spans them all
+        merged.meta["obs"] = metrics.merge_obs(
+            [r.meta["obs"] for r in results if "obs" in r.meta])
         spec_dicts = [r.spec for r in results]
         if any(d != spec_dicts[0] for d in spec_dicts[1:]):
             merged.spec = {"spec_version": spec_dicts[0]["spec_version"],

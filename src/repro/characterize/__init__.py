@@ -21,6 +21,13 @@ Layers (measurement -> inference):
   and ``core.autotune``; ``compare_to`` reproduces the Table-1 deltas
 * ``report``    — markdown/JSON rendering (also:
   ``python -m repro.bench characterize``)
+
+Observability: adaptive rounds trace as ``characterize.round`` spans with
+``characterize.bisect`` decision events (``--trace``; see
+``bench/README.md`` -> Observability), every CLI characterization appends
+its bandwidth cells to the run ledger, and the ledger's regression gate
+(``python -m repro.bench diff``) reuses ``detect.significant_step`` — the
+same noise-aware two-sample threshold the plateau merge applies here.
 """
 from repro.characterize.adaptive import (AdaptiveSweep,  # noqa: F401
                                          DEFAULT_RESOLUTION, adaptive_sweep)

@@ -101,6 +101,7 @@ def adaptive_sweep(mix: str = "load_sum", *, runner=None, backend: str = "xla",
 
     from repro.bench import BenchSpec, Runner
     from repro.core import buffers
+    from repro.obs import metrics, trace
 
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1: {max_rounds} "
@@ -121,26 +122,35 @@ def adaptive_sweep(mix: str = "load_sum", *, runner=None, backend: str = "xla",
     history: list[dict] = []
     detection = None
     rounds = 0
+    tr = trace.get_tracer()
     while rounds < max_rounds:
         new = [s for s in sizes if s not in measured]
         if not new:
             break
-        res = runner.run(base.replace(sizes=tuple(new)))
-        measured.update(p.nbytes for p in res.points)
-        if merged is None:
-            merged = res
-        else:
-            merged.points.extend(res.points)
-            merged.meta["sizes"] = sorted({*merged.meta.get("sizes", []),
-                                           *res.meta.get("sizes", [])})
-        rounds += 1
-        detection = detect_levels(
-            sorted(measured),
-            [_mean_gbps(merged, mix, s) for s in sorted(measured)],
-            mix=mix, **detect_kw)
-        unresolved = detection.unresolved(resolution)
-        sizes = _bisection_candidates(detection, resolution, measured, jdtype)
-        floored = bool(unresolved) and not sizes
+        with tr.span("characterize.round", cat="characterize",
+                     round=rounds + 1, mix=mix, new_points=len(new)):
+            metrics.REGISTRY.inc("adaptive_rounds")
+            res = runner.run(base.replace(sizes=tuple(new)))
+            measured.update(p.nbytes for p in res.points)
+            if merged is None:
+                merged = res
+            else:
+                merged.points.extend(res.points)
+                merged.meta["sizes"] = sorted({*merged.meta.get("sizes", []),
+                                               *res.meta.get("sizes", [])})
+            rounds += 1
+            detection = detect_levels(
+                sorted(measured),
+                [_mean_gbps(merged, mix, s) for s in sorted(measured)],
+                mix=mix, **detect_kw)
+            unresolved = detection.unresolved(resolution)
+            sizes = _bisection_candidates(detection, resolution, measured,
+                                          jdtype)
+            floored = bool(unresolved) and not sizes
+            tr.event("characterize.bisect", cat="characterize",
+                     round=rounds, n_levels=detection.n_levels,
+                     brackets=[[b.lo, b.hi] for b in unresolved],
+                     candidates=sizes, floored=floored)
         history.append({
             "round": rounds, "new_points": len(new),
             "n_levels": detection.n_levels,

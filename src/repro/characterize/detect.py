@@ -123,6 +123,27 @@ def _segment_dp(y: np.ndarray, max_segments: int, penalty: float
     return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
 
 
+def significant_step(m1: float, n1: int, m2: float, n2: int, *,
+                     sigma: float, z: float = 3.0, min_drop: float = 0.12
+                     ) -> bool:
+    """The noise-aware two-sample test: is the gap between two log-scale
+    means (``n1``/``n2`` samples each, common noise scale ``sigma``) a real
+    step, or noise?
+
+    The gap must clear BOTH the physical floor ``log(1+min_drop)`` (a
+    smaller relative step does not count, however many samples agree on it)
+    and the sampling bound ``z·σ·√(1/n₁+1/n₂)`` (few-sample means need a
+    bigger gap).  Shared by the plateau merger below (a non-significant
+    step between adjacent segments merges them) and the run ledger's
+    regression gate (``obs.ledger.diff_records`` — a significant drop in a
+    bandwidth cell is a regression), so the detector and the gate cannot
+    disagree about what counts as noise.
+    """
+    thr = max(math.log(1.0 + min_drop),
+              z * sigma * math.sqrt(1.0 / max(n1, 1) + 1.0 / max(n2, 1)))
+    return abs(m1 - m2) >= thr
+
+
 def _merge_segments(segs, y: np.ndarray, *, min_drop: float, sigma: float,
                     z: float = 3.0) -> list[tuple[int, int]]:
     """Iteratively merge adjacent segments the data can't tell apart.
@@ -131,10 +152,11 @@ def _merge_segments(segs, y: np.ndarray, *, min_drop: float, sigma: float,
     recomputed after every merge; callers pass the median-filtered series
     with the RAW noise sigma — see ``detect_levels``):
 
-    * indistinguishable: |Δmean| below both the physical floor
-      (``log(1+min_drop)`` — a smaller step is noise, not a hierarchy
-      level) and a two-sample noise bound ``z·σ·√(1/n₁+1/n₂)`` (short
-      plateau fragments need a bigger gap to count as real),
+    * indistinguishable: |Δmean| fails ``significant_step`` — below both
+      the physical floor (``log(1+min_drop)`` — a smaller step is noise,
+      not a hierarchy level) and the two-sample noise bound
+      ``z·σ·√(1/n₁+1/n₂)`` (short plateau fragments need a bigger gap to
+      count as real),
     * non-physical: the OUTER segment is *faster* — bandwidth cannot rise
       with working-set size, so an upward step is measurement noise and the
       pair is one plateau.
@@ -149,11 +171,10 @@ def _merge_segments(segs, y: np.ndarray, *, min_drop: float, sigma: float,
         for i in range(len(segs) - 1):
             a, b = segs[i], segs[i + 1]
             m1, m2 = mean(a), mean(b)
-            n1, n2 = a[1] - a[0], b[1] - b[0]
-            thr = max(math.log(1.0 + min_drop),
-                      z * sigma * math.sqrt(1.0 / n1 + 1.0 / n2))
+            sig = significant_step(m1, a[1] - a[0], m2, b[1] - b[0],
+                                   sigma=sigma, z=z, min_drop=min_drop)
             d = abs(m1 - m2)
-            if (d < thr or m2 > m1) and (best_d is None or d < best_d):
+            if (not sig or m2 > m1) and (best_d is None or d < best_d):
                 best_i, best_d = i, d
         if best_i is None:
             break

@@ -50,6 +50,15 @@ class TimingResult:
     def gflops(self) -> float:
         return self.flops_per_call / self.mean_s / 1e9 if self.mean_s else 0.0
 
+    def samples(self, limit: int | None = None) -> tuple[float, ...]:
+        """The raw per-rep timings (last ``limit`` when bounded) — what the
+        result schema retains per point (``BenchPoint.rep_times_s``) so a
+        downstream consumer (the run ledger's noise test) can compute CIs
+        instead of trusting the mean triple.  The public (mean, std, min)
+        triple is untouched: it is still computed over ALL reps."""
+        times = self.times_s if limit is None else self.times_s[-limit:]
+        return tuple(float(t) for t in times)
+
     def summary(self) -> dict:
         return {"mean_s": self.mean_s, "std_s": self.std_s, "min_s": self.min_s,
                 "reps": len(self.times_s), "gbps": self.gbps,
@@ -69,6 +78,28 @@ def time_fn(fn, *args, reps: int = 20, warmup: int = 3,
         raise ValueError(f"reps must be >= 1: {reps}")
     if warmup < 0:
         raise ValueError(f"warmup must be >= 0: {warmup}")
+    from repro.obs import trace
+    tr = trace.get_tracer()
+    if tr.enabled:
+        # traced path: one span around the warmup block (first call holds
+        # lower+compile), one per timed rep.  A separate branch, not a
+        # conditional inside the loop: the disabled path below is the
+        # byte-identical original loop, so tracing OFF adds zero overhead
+        # to the timed reps (guarded by a no-op benchmark test).
+        with tr.span("timing.warmup", cat="timing", reps=warmup):
+            if warmup:
+                out = fn(*args)
+                for _ in range(warmup - 1):
+                    out = fn(*args)
+                jax.block_until_ready(out)
+        times = []
+        for i in range(reps):
+            with tr.span("timing.rep", cat="timing", rep=i):
+                t0 = time.perf_counter_ns()
+                out = fn(*args)
+                jax.block_until_ready(out)
+                times.append((time.perf_counter_ns() - t0) / 1e9)
+        return TimingResult(times, bytes_per_call, flops_per_call)
     if warmup:                 # warmup=0 is valid: first timed rep compiles
         out = fn(*args)
         for _ in range(warmup - 1):

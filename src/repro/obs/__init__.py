@@ -1,0 +1,40 @@
+"""repro.obs — observability for the benchmark subsystem.
+
+The paper's whole argument is that a throughput number only means something
+with its measurement conditions attached.  This package attaches them three
+ways, each consumable on its own:
+
+* ``trace``   — a zero-dependency span tracer (stdlib only).  Off by
+  default; enabled via ``--trace`` on the CLI, ``REPRO_TRACE=1`` in the
+  environment, or ``trace.configure(enabled=True)`` in code.  The Runner,
+  the backends, the distributed launcher, and the adaptive characterizer
+  are instrumented; spans export as JSON-lines or Chrome trace-event JSON
+  (loadable in Perfetto / ``chrome://tracing``).
+* ``metrics`` — a counter/gauge registry (cache hits/misses, buffers
+  built/released, peak resident working-set bytes, audit waivers,
+  straggler kills, adaptive rounds).  Always on (increments are dict ops
+  outside the timed path); every ``Runner.run`` snapshots its delta into
+  ``BenchResult.meta["obs"]`` (result schema v6).
+* ``ledger``  — a persistent on-disk run history (``BENCH_history/``):
+  every CLI ``run`` / ``characterize`` / ``istream`` / ``latency``
+  invocation appends one compact record (spec digest, machine identity,
+  per-mix bandwidth curves with noise statistics, latency knees, trace
+  path).  ``python -m repro.bench history`` lists it and ``python -m
+  repro.bench diff`` gates regressions with the same noise-aware
+  two-sample test ``characterize.detect`` uses for plateau merging.
+
+Import discipline: ``trace`` and ``metrics`` import ONLY the stdlib (they
+are safe from any module, including ``core.timing``); ``ledger`` defers its
+``repro.bench`` / ``repro.characterize`` imports into function bodies.
+"""
+from repro.obs import ledger, metrics, trace
+from repro.obs.ledger import append_record, diff_records, read_ledger
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.obs.trace import Tracer, configure, get_tracer
+
+__all__ = [
+    "trace", "metrics", "ledger",
+    "Tracer", "configure", "get_tracer",
+    "REGISTRY", "MetricsRegistry",
+    "append_record", "read_ledger", "diff_records",
+]

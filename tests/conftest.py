@@ -4,6 +4,14 @@ import jax
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _ledger_isolation(tmp_path, monkeypatch):
+    """Point the run ledger at a per-test temp dir: in-process CLI tests
+    must not append BENCH_history/ records into the repo checkout."""
+    from repro.obs import ledger
+    monkeypatch.setenv(ledger.LEDGER_ENV, str(tmp_path / "BENCH_history"))
+
+
 @pytest.fixture(scope="session")
 def smoke_ctx():
     from repro.distributed.sharding import make_smoke_ctx

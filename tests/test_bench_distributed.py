@@ -141,7 +141,7 @@ def gathered(tmp_path_factory):
 
 def test_launcher_gathers_one_result_on_process0(gathered):
     d, log = gathered
-    assert d["schema_version"] == 5
+    assert d["schema_version"] == 6
     assert d["machine"]["process_count"] == 2
     assert d["machine"]["process_index"] == 0
     assert d["machine"]["local_device_counts"] == [2, 2]
@@ -185,10 +185,10 @@ print(json.dumps([[p.mix, p.nbytes, p.bytes_per_call, p.flops_per_call]
     assert sharded == distributed
 
 
-def test_gathered_result_roundtrips_as_v5(gathered):
+def test_gathered_result_roundtrips_as_v6(gathered):
     d, _ = gathered
     res = BenchResult.from_dict(d)
-    assert res.schema_version == 5
+    assert res.schema_version == 6
     assert all(isinstance(p, BenchPoint) for p in res.points)
     # by_size resolves the requested size (1M here survives rounding intact)
     assert len(res.by_size(2**20)) == 2

@@ -104,9 +104,17 @@ assert [s["devices"] for s in back.spec["many"]] == [1, 2, 4, 8]
 
 # compiled-case cache: re-running the sweep re-traces nothing
 misses = runner.cache_misses
-runner.run_many(specs)
+rerun = runner.run_many(specs)
 assert runner.cache_misses == misses, (runner.cache_misses, misses)
 assert runner.cache_hits >= len(specs)
+# ... and the counters surface in the result envelope (schema v6 obs
+# block): the rerun is all hits, and the runner-cumulative block carries
+# the Runner's lifetime totals
+obs = rerun.meta["obs"]
+assert obs["counters"]["cache_hits"] >= len(specs), obs
+assert obs["counters"].get("cache_misses", 0) == 0, obs
+assert obs["runner"] == {"cache_hits": runner.cache_hits,
+                         "cache_misses": runner.cache_misses}, obs
 
 # legacy wrapper rides the same backend (no measurement loop of its own)
 from repro.core.scaling import scaling_curve

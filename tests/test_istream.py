@@ -309,9 +309,9 @@ def test_run_istream_xla_minimal():
     assert report.issue_rate > 0
     assert len(report.profiles) == 2
     assert "| backend | mix |" in report.table
-    # annotated result survives the v5 JSON round-trip
+    # annotated result survives the v6 JSON round-trip
     back = BenchResult.from_dict(json.loads(report.result.to_json()))
-    assert back.schema_version == 5
+    assert back.schema_version == 6
     assert back.points[0].istream["label"] in (BANDWIDTH_BOUND, ISSUE_BOUND)
 
 
@@ -324,7 +324,7 @@ def test_cli_istream(tmp_path):
                    "--out", str(out)])
     assert rc == 0
     d = json.loads(out.read_text())
-    assert d["schema_version"] == 5
+    assert d["schema_version"] == 6
     assert d["points"] and all(p["istream"] is not None
                                for p in d["points"])
     assert d["meta"]["istream"]["issue_rate_elems_per_s"] > 0
